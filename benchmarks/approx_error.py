@@ -1,0 +1,117 @@
+"""Paper Fig. 1 + Fig. 4 / Tab. 7: approximation error vs budget vs baselines.
+
+Fig. 1 claim to reproduce: keeping ~10% of {MRA coefficients, ranks, nonzero
+entries} gives errors ~{0.30, 1.24, 0.39} — i.e. MRA < sparse < low-rank on a
+representative attention matrix. We check the ORDERING and that MRA at a 10%
+entry budget reaches a comparable error band on structured attention.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import AttentionSpec, self_attention
+from repro.core.mra import MraConfig, full_attention, mra2_attention
+
+from .common import rel_error, structured_qkv, time_call
+
+
+def fig1_scores(rng, N=512, sharp=3.0):
+    """Representative attention scores: sharp banded diagonal of varying width
+    (full-rank structure), a few global key columns, contiguous content
+    clusters, token noise. Matches the block-local-smoothness (locality)
+    regime the paper's Lemma 4.1 assumes for trained models.
+    """
+    i = np.arange(N)[:, None]
+    j = np.arange(N)[None, :]
+    w = 8 + 24 * (0.5 + 0.5 * np.sin(2 * np.pi * i / N * 3))
+    P = 1.5 * np.exp(-((i - j).astype(np.float64) ** 2) / (2 * w**2))
+    for g in rng.integers(0, N, 6):
+        P[:, g] += 0.7 + 0.2 * rng.standard_normal()
+    nclust = 10
+    bounds = np.sort(rng.integers(0, N, nclust - 1))
+    bounds = np.r_[0, bounds, N]
+    cid = np.zeros(N, int)
+    for c in range(nclust):
+        cid[bounds[c]:bounds[c + 1]] = c
+    P += 0.3 * rng.standard_normal((nclust, nclust))[cid[:, None], cid[None, :]]
+    P += 0.2 * rng.standard_normal((N, N))
+    return P * sharp
+
+
+def fig1_matrix_level(rng, N=512, keep=0.10, block=32):
+    """Matrix-level comparison on A = exp(P) at a shared 10% budget.
+
+    Returns (mra, svd, nystrom, sparse) relative Frobenius errors. Notes:
+      * SVD is the *information-theoretic optimum* for low rank — far
+        stronger than any practical method; the paper's 1.24 corresponds to
+        realizable low-rank, which Nystrom represents here (it explodes).
+      * top-entry sparsity here is an O(n^2) *oracle* (needs the full
+        matrix); practical sparse methods are compared in the Fig-4 rows.
+    """
+    P = fig1_scores(rng, N)
+    P = P - P.max()
+    A = np.exp(P)
+    fro = np.linalg.norm(A)
+    nb = N // block
+    m = max(int(keep * N * N / (block * block)), 1)
+    mu = np.exp(P.reshape(nb, block, nb, block).mean((1, 3)))  # coarse mu (eq. 6)
+    order = np.argsort(mu, axis=None)[::-1]
+    A_mra = np.repeat(np.repeat(mu, block, 0), block, 1)
+    for idx in order[:m]:
+        x, y = divmod(int(idx), nb)
+        A_mra[x * block:(x + 1) * block, y * block:(y + 1) * block] = \
+            A[x * block:(x + 1) * block, y * block:(y + 1) * block]
+    err_mra = np.linalg.norm(A_mra - A) / fro
+
+    r = max(int(keep * N), 1)
+    U, S, Vt = np.linalg.svd(A, full_matrices=False)
+    err_svd = np.linalg.norm((U[:, :r] * S[:r]) @ Vt[:r] - A) / fro
+
+    cols = rng.choice(N, r, replace=False)
+    C = A[:, cols]
+    W = A[np.ix_(cols, cols)]
+    A_nys = C @ np.linalg.pinv(W, rcond=1e-8) @ A[cols, :]
+    err_nys = np.linalg.norm(A_nys - A) / fro
+
+    kth = np.partition(A.flatten(), -int(keep * N * N))[-int(keep * N * N)]
+    err_sp = np.linalg.norm(np.where(A >= kth, A, 0.0) - A) / fro
+    return err_mra, err_svd, err_nys, err_sp
+
+
+def run(emit):
+    rng = np.random.default_rng(0)
+
+    errs = np.mean([fig1_matrix_level(np.random.default_rng(s)) for s in range(5)],
+                   axis=0)
+    err_mra, err_svd, err_nys, err_sp = errs
+    emit("fig1_err_mra_10pct", 0.0, f"{err_mra:.3f}")
+    emit("fig1_err_lowrank_svd_10pct", 0.0, f"{err_svd:.3f}")
+    emit("fig1_err_lowrank_nystrom_10pct", 0.0, f"{err_nys:.3f}")
+    emit("fig1_err_sparse_oracle_10pct", 0.0, f"{err_sp:.3f}")
+    emit("fig1_mra_beats_practical_lowrank", 0.0, str(bool(err_mra < err_nys)))
+    emit("fig1_mra_beats_optimal_svd", 0.0, str(bool(err_mra < err_svd)))
+
+    # Fig. 4 / Tab. 7 protocol: error + runtime per method at N=512
+    q, k, v = structured_qkv(rng, B=1, H=8, N=512, D=64)
+    for bpr in (1, 2, 4, 8):
+        cfg = MraConfig(block_size=32, blocks_per_row=bpr)
+        us = time_call(lambda q, k, v: mra2_attention(q, k, v, cfg), q, k, v)
+        err = rel_error(mra2_attention(q, k, v, cfg), q, k, v)
+        emit(f"mra2_b32_bpr{bpr}_n512", us, f"{err:.4f}")
+        cfg_s = MraConfig(block_size=32, blocks_per_row=bpr, variant="sparse")
+        us = time_call(lambda q, k, v: mra2_attention(q, k, v, cfg_s), q, k, v)
+        err = rel_error(mra2_attention(q, k, v, cfg_s), q, k, v)
+        emit(f"mra2s_b32_bpr{bpr}_n512", us, f"{err:.4f}")
+
+    for kind, kw in [("linformer", {}), ("performer", {}), ("nystromformer", {}),
+                     ("longformer", {}), ("bigbird", {}),
+                     ("h_transformer_1d", {})]:
+        spec = AttentionSpec(kind=kind, **kw)
+        us = time_call(lambda q, k, v: self_attention(q, k, v, spec), q, k, v)
+        err = rel_error(self_attention(q, k, v, spec), q, k, v)
+        emit(f"{kind}_n512", us, f"{err:.4f}")
+
+    us = time_call(lambda q, k, v: full_attention(q, k, v), q, k, v)
+    emit("full_attention_n512", us, "0.0000")

@@ -1,0 +1,34 @@
+"""Beyond-paper: MRA decode (top-k KV-block selection) quality + cost.
+
+Per decoded token, MRA decode reads O(S/b + m*b) of the KV cache instead of
+O(S). This benchmark sweeps the exact-block budget m and reports the
+attention-output error vs exact decode, plus host wall-time.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mra import MraConfig
+from repro.core.mra_decode import full_decode_attention, mra2_decode_attention
+
+from .common import structured_qkv, time_call
+
+
+def run(emit):
+    rng = np.random.default_rng(3)
+    B, Hq, Hkv, S, D, b = 4, 8, 2, 4096, 64, 32
+    _, k, v = structured_qkv(rng, B=B, H=Hkv, N=S, D=D)
+    q = jnp.asarray(rng.standard_normal((B, Hq, 1, D)), jnp.float32)
+    lengths = jnp.full((B,), S, jnp.int32)
+    ref = full_decode_attention(q, k, v, lengths)
+    cfg = MraConfig(block_size=b)
+    for m in (4, 16, 64):
+        out = mra2_decode_attention(q, k, v, lengths, cfg, decode_blocks=m)
+        err = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+        us = time_call(
+            lambda q, k, v: mra2_decode_attention(q, k, v, lengths, cfg, decode_blocks=m),
+            q, k, v)
+        emit(f"mra_decode_s4096_m{m}", us, f"{err:.4f}")
+    us = time_call(lambda q, k, v: full_decode_attention(q, k, v, lengths), q, k, v)
+    emit("full_decode_s4096", us, "0.0000")

@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the table's metric:
+relative error, NLL, scaling exponent, or a boolean claim check).
+
+  approx_error  -> paper Fig. 1 + Fig. 4 / Tab. 7 (error vs budget/method)
+  entropy_error -> paper Fig. 5 (error vs softmax entropy)
+  scaling       -> paper Tab. 7 (runtime scaling 256..4096)
+  swap_eval     -> paper Tab. 1/2 (drop-in compatibility with trained weights)
+  decode_bench  -> beyond-paper MRA decode (KV-block selection)
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated module subset")
+    args = ap.parse_args()
+
+    from . import approx_error, decode_bench, entropy_error, scaling, swap_eval
+
+    modules = {
+        "approx_error": approx_error,
+        "entropy_error": entropy_error,
+        "scaling": scaling,
+        "swap_eval": swap_eval,
+        "decode_bench": decode_bench,
+    }
+    chosen = args.only.split(",") if args.only else list(modules)
+
+    print("name,us_per_call,derived")
+
+    def emit(name, us, derived):
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    for name in chosen:
+        modules[name].run(emit)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper Tab. 7: runtime/error scaling with sequence length (256..4096).
+
+Wall-times are CPU-host measurements (relative scaling is the signal; the
+absolute TPU numbers come from the roofline analysis). Confirms the paper's
+complexity claim: MRA-2 cost grows ~linearly in n at fixed blocks_per_row
+while exact attention grows quadratically.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.mra import MraConfig, full_attention, mra2_attention
+
+from .common import rel_error, structured_qkv, time_call
+
+
+def run(emit):
+    rng = np.random.default_rng(2)
+    times_mra, times_full, lens = [], [], []
+    for N in (256, 512, 1024, 2048, 4096):
+        q, k, v = structured_qkv(rng, B=1, H=4, N=N, D=64)
+        cfg = MraConfig(block_size=32, blocks_per_row=4)
+        us = time_call(lambda q, k, v: mra2_attention(q, k, v, cfg), q, k, v)
+        err = rel_error(mra2_attention(q, k, v, cfg), q, k, v)
+        emit(f"mra2_n{N}", us, f"{err:.4f}")
+        times_mra.append(us)
+        lens.append(N)
+        if N <= 2048:
+            us_f = time_call(lambda q, k, v: full_attention(q, k, v), q, k, v)
+            emit(f"full_n{N}", us_f, "0.0000")
+            times_full.append(us_f)
+
+    # empirical scaling exponents (log-log slope)
+    def slope(ts, ns):
+        return float(np.polyfit(np.log(ns[: len(ts)]), np.log(ts), 1)[0])
+
+    emit("mra2_scaling_exponent", 0.0, f"{slope(times_mra, lens):.2f}")
+    emit("full_scaling_exponent", 0.0, f"{slope(times_full, lens):.2f}")

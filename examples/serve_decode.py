@@ -1,0 +1,58 @@
+"""Batched serving with MRA decode: top-k KV-block selection per new token.
+
+Loads a (randomly initialized or checkpointed) model, serves a batch of
+requests through the continuous-batching engine, and compares MRA decode
+against exact decode attention on the same prompts.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.checkpoint import latest_step, restore
+from repro.configs import get_smoke_config
+from repro.core.attention import AttentionSpec
+from repro.models import get_model, init_params
+from repro.serve import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    outs = {}
+    for kind in ("mra2", "full"):
+        cfg = get_smoke_config(args.arch)
+        cfg = cfg.replace(attention=dataclasses.replace(
+            cfg.attention, kind=kind, decode_blocks=2))
+        model = get_model(cfg)
+        params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+        if args.ckpt_dir:
+            step = latest_step(args.ckpt_dir)
+            if step is not None:
+                params = restore(args.ckpt_dir, step, params)
+                print(f"restored checkpoint step {step}")
+        eng = Engine(cfg, params, slots=4, max_len=128)
+        rng = np.random.default_rng(0)
+        reqs = [Request(prompt=rng.integers(1, cfg.vocab, size=ln),
+                        max_new_tokens=args.new_tokens)
+                for ln in (5, 9, 13, 7)]
+        done = eng.run(reqs)
+        outs[kind] = [r.out.tolist() for r in done]
+        print(f"[{kind}] generated:")
+        for i, r in enumerate(done):
+            print(f"  req{i} ({len(r.prompt)} prompt toks) -> {r.out.tolist()}")
+
+    agree = sum(int(a == b) for a, b in zip(outs["mra2"], outs["full"]))
+    print(f"\nMRA decode vs exact decode: {agree}/{len(outs['full'])} "
+          "sequences identical (greedy argmax robustness to approximation)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Model / run configuration schema shared by every architecture."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.attention import AttentionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    aux_loss_coef: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | rwkv6 | hubert | recurrentgemma | internvl
+    num_layers: int
+    d_model: int
+    num_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    causal: bool = True
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    act: str = "swiglu"  # swiglu | gelu
+    pos: str = "rope"  # rope | learned | none
+    rope_theta: float = 10000.0
+    max_seq: int = 8192  # learned-positions table size
+    moe: Optional[MoESpec] = None
+    attention: AttentionSpec = dataclasses.field(default_factory=AttentionSpec)
+    # hybrid (recurrentgemma): repeating block pattern
+    block_pattern: Tuple[str, ...] = ()  # e.g. ("rglru", "rglru", "local")
+    local_window: int = 2048
+    lru_width: int = 0  # 0 -> d_model
+    conv1d_width: int = 4
+    # rwkv6
+    rwkv_head_dim: int = 64
+    rwkv_chunk: int = 16  # keeps the factored chunk form exact in fp32
+    decay_lora: int = 64
+    # modality frontends (stubs per assignment: precomputed embeddings in)
+    frontend: Optional[str] = None  # audio_frames | vision_patches
+    frontend_dim: int = 512
+    num_patches: int = 0
+    # numerics / execution
+    pad_vocab_to: int = 256  # embedding table padded so vocab shards over TP
+    # §Perf optimization (off in the paper-faithful baseline): pad the query
+    # heads to a multiple of this and expand KV to this many slots so the
+    # whole attention block shards over the model axis even when the real
+    # head counts don't divide it (qwen2 28H, llama 24H, internvl 14H).
+    # Padded heads are hard-masked before the output projection (zero
+    # function + zero gradient), so the effective arch keeps its exact
+    # head count.
+    pad_attn_heads_to: int = 0
+    # MoE dispatch (§Perf K iterations): "psum" = replicated tokens + local
+    # expert slice + psum (simple, more collective bytes); "a2a" = sequence-
+    # sharded tokens exchanged via all_to_all to expert owners and back
+    # (production EP; falls back to psum when seq doesn't divide the axis).
+    moe_dispatch: str = "psum"
+    param_dtype: str = "float32"
+    activ_dtype: str = "bfloat16"
+    scan_layers: bool = False
+    remat: str = "none"  # none | full | dots
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = max(self.pad_vocab_to, 1)
+        return -(-self.vocab // m) * m
+
+    @property
+    def padded_heads(self) -> int:
+        """Query-head count after TP padding (== num_heads when disabled)."""
+        t = self.pad_attn_heads_to
+        if t <= 0 or self.num_heads % t == 0:
+            return self.num_heads
+        return -(-self.num_heads // t) * t
+
+    @property
+    def kv_slots(self) -> int:
+        """KV slot count used by full-sequence attention (expanded for TP)."""
+        t = self.pad_attn_heads_to
+        if t <= 0 or (self.num_heads % t == 0 and self.kv_heads % min(t, self.num_heads) == 0):
+            return self.kv_heads
+        return min(t, self.padded_heads)
+
+    @property
+    def pdt(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def adt(self):
+        return jnp.dtype(self.activ_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    """One assigned input-shape cell."""
+
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}

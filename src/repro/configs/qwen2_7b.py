@@ -1,0 +1,37 @@
+"""qwen2-7b — GQA with QKV bias [arXiv:2407.10671; hf].
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.
+"""
+from repro.configs.base import ModelConfig
+from repro.core.attention import AttentionSpec
+
+ARCH_ID = "qwen2-7b"
+
+CONFIG = ModelConfig(
+    name=ARCH_ID,
+    family="dense",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    kv_heads=4,
+    d_ff=18944,
+    vocab=152064,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1e6,
+    attention=AttentionSpec(kind="mra2", block_size=128, blocks_per_row=4,
+                            decode_blocks=16),
+    remat="full",
+    scan_layers=True,
+)
+
+
+def smoke():
+    return CONFIG.replace(
+        num_layers=2, d_model=64, num_heads=4, kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512,
+        attention=AttentionSpec(kind="mra2", block_size=16, blocks_per_row=2,
+                                decode_blocks=2),
+        remat="none",
+        scan_layers=False,
+    )

@@ -1,0 +1,17 @@
+"""Core: the paper's contribution — MRA-2 approximate self-attention."""
+from .attention import AttentionSpec, decode_attention, self_attention
+from .mra import MraConfig, block_mean, full_attention, mra2_attention
+from .mra_decode import PyramidState, full_decode_attention, mra2_decode_attention
+
+__all__ = [
+    "AttentionSpec",
+    "MraConfig",
+    "PyramidState",
+    "block_mean",
+    "decode_attention",
+    "full_attention",
+    "full_decode_attention",
+    "mra2_attention",
+    "mra2_decode_attention",
+    "self_attention",
+]

@@ -1,0 +1,180 @@
+"""Attention dispatch: one API, every mechanism in the paper's comparison.
+
+Models declare an ``AttentionSpec``; ``self_attention`` routes to MRA-2 /
+MRA-2-s / exact softmax / a baseline. This is the integration point that
+makes the paper's technique a first-class, drop-in feature (paper §6:
+"our implementation can be directly plugged into existing Transformers").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import baselines
+from .mra import MraConfig, full_attention, mra2_attention
+from .mra_decode import full_decode_attention, mra2_decode_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    """Which attention mechanism a model layer uses.
+
+    kind: "full" | "mra2" | "mra2_s" | "local" | any baselines.REGISTRY key.
+    block_size / blocks_per_row: MRA-2 parameters (paper defaults 32 / 4-16).
+    decode_blocks: MRA decode-time budget (exact KV blocks per new token).
+    local_window: window for kind=="local" (RecurrentGemma local attention).
+    """
+
+    kind: str = "full"
+    block_size: int = 32
+    blocks_per_row: int = 4
+    decode_blocks: int = 16
+    local_window: int = 1024
+    softmax_scale: Optional[float] = None
+    use_kernel: bool = False
+    interpret: bool = False
+    # beyond-paper (§Perf Y3): int8 KV cache with per-token-per-head scales —
+    # halves decode memory footprint and HBM traffic; MRA decode dequantizes
+    # only the gathered blocks. Only honored by the mra2/mra2_s decode path.
+    kv_quant: bool = False
+
+    def mra_config(self, causal: bool) -> MraConfig:
+        return MraConfig(
+            block_size=self.block_size,
+            blocks_per_row=self.blocks_per_row,
+            variant="sparse" if self.kind == "mra2_s" else "full",
+            causal=causal,
+            softmax_scale=self.softmax_scale,
+            use_kernel=self.use_kernel,
+            interpret=self.interpret,
+        )
+
+
+def self_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    spec: AttentionSpec,
+    *,
+    causal: bool = False,
+    key_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Sequence self-attention (training / prefill). q (B,Hq,N,D), k/v (B,Hkv,N,D)."""
+    if spec.kind in ("mra2", "mra2_s"):
+        return mra2_attention(q, k, v, spec.mra_config(causal), key_mask=key_mask)
+    if spec.kind == "full":
+        return full_attention(
+            q, k, v, causal=causal, softmax_scale=spec.softmax_scale, key_mask=key_mask
+        )
+    if spec.kind == "local":
+        return _local_attention(q, k, v, spec, causal=causal, key_mask=key_mask)
+    fn = baselines.REGISTRY.get(spec.kind)
+    if fn is None:
+        raise ValueError(f"unknown attention kind {spec.kind!r}")
+    # baselines are bidirectional approximators (paper protocol); GQA handled
+    # by expanding KV heads (baselines are never used on the production path).
+    G = q.shape[1] // k.shape[1]
+    if G > 1:
+        k = jnp.repeat(k, G, axis=1)
+        v = jnp.repeat(v, G, axis=1)
+    return fn(q, k, v, softmax_scale=spec.softmax_scale)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    spec: AttentionSpec,
+    *,
+    pyramid=None,
+    k_scale=None,
+    v_scale=None,
+) -> jax.Array:
+    """Single-token decode attention against a KV cache."""
+    if spec.kind in ("mra2", "mra2_s"):
+        cfg = spec.mra_config(causal=True)
+        return mra2_decode_attention(
+            q, k_cache, v_cache, lengths, cfg,
+            decode_blocks=spec.decode_blocks, pyramid=pyramid,
+            k_scale=k_scale, v_scale=v_scale,
+        )
+    if spec.kind == "local":
+        return _local_decode_attention(q, k_cache, v_cache, lengths, spec)
+    return full_decode_attention(q, k_cache, v_cache, lengths,
+                                 softmax_scale=spec.softmax_scale)
+
+
+def _local_attention(q, k, v, spec, *, causal, key_mask):
+    """Sliding-window attention (RecurrentGemma's local layers).
+
+    Uses banded block attention: each query block sees its own and the
+    previous ``w//bs`` key blocks. O(n * w).
+    """
+    B, Hq, N, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    w = spec.local_window
+    bs = min(w, N)
+    if N % bs != 0:
+        pad = (-N) % bs
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n = q.shape[2]
+    nb = n // bs
+    scale = spec.softmax_scale if spec.softmax_scale is not None else 1.0 / (D**0.5)
+    qb = q.reshape(B, Hkv, G, nb, bs, D).astype(jnp.float32)
+    kb = k.reshape(B, Hkv, nb, bs, D).astype(jnp.float32)
+    vb = v.reshape(B, Hkv, nb, bs, D).astype(jnp.float32)
+    if key_mask is None:
+        key_mask = jnp.arange(n) < N
+        key_mask = jnp.broadcast_to(key_mask[None], (B, n))
+    else:
+        key_mask = jnp.pad(key_mask, ((0, 0), (0, n - key_mask.shape[1])))
+    mb = key_mask.reshape(B, nb, bs)
+
+    shifts = (-1, 0) if causal else (-1, 0, 1)
+    scores, vals, valid = [], [], []
+    for sh in shifts:
+        kk = jnp.roll(kb, -sh, axis=2)
+        vv = jnp.roll(vb, -sh, axis=2)
+        mm = jnp.roll(mb, -sh, axis=1)
+        ok_blk = (jnp.arange(nb) + sh >= 0) & (jnp.arange(nb) + sh < nb)
+        s = jnp.einsum("bhgnid,bhnjd->bhgnij", qb, kk) * scale
+        qi = jnp.arange(bs)[:, None]
+        kj = jnp.arange(bs)[None, :] + sh * bs
+        if causal:
+            dist_ok = (kj <= qi) & (qi - kj < w)
+        else:
+            dist_ok = jnp.abs(qi - kj) <= w // 2
+        mask = dist_ok[None, None, None, None] & ok_blk[None, None, None, :, None, None]
+        mask = mask & mm[:, None, None, :, None, :]
+        s = jnp.where(mask, s, -1e9)
+        scores.append(s)
+        vals.append(vv)
+    s_all = jnp.concatenate(scores, axis=-1)
+    v_all = jnp.concatenate(vals, axis=-2)
+    p = jax.nn.softmax(s_all, axis=-1)
+    out = jnp.einsum("bhgnij,bhnjd->bhgnid", p, v_all)
+    return out.reshape(B, Hq, n, D)[:, :, :N].astype(q.dtype)
+
+
+def _local_decode_attention(q, k_cache, v_cache, lengths, spec):
+    """Decode attention restricted to the last ``local_window`` positions."""
+    B, Hq, _, D = q.shape
+    S = k_cache.shape[2]
+    pos = jnp.arange(S)[None, :]
+    ok = (pos < lengths[:, None]) & (pos >= lengths[:, None] - spec.local_window)
+    scale = spec.softmax_scale if spec.softmax_scale is not None else 1.0 / (D**0.5)
+    Hkv = k_cache.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhjd->bhgj", qg, k_cache.astype(jnp.float32)) * scale
+    s = jnp.where(ok[:, None, None, :], s, -1e9)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgj,bhjd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)

@@ -1,0 +1,390 @@
+"""MRA-2 approximate self-attention (Zeng et al., ICML 2022), TPU-native JAX.
+
+Implements the practical two-level instantiation R = {b, 1} used for every
+experiment in the paper:
+
+  * coarse scores  ``mu[x, y] = exp((Q~_b)_x (K~_b)_y^T * scale)``  on the
+    (n/b, n/b) block grid (exp-of-average, Jensen lower bound of the block
+    mean of exp, paper eq. (6)),
+  * a budgeted top-k selection of blocks (Alg. 1 with R = {b, 1}) which are
+    then evaluated *exactly* at scale 1,
+  * the remaining blocks keep the coarse value as a low-rank-ish background
+    (``variant="full"`` == MRA-2) or are dropped (``variant="sparse"`` ==
+    MRA-2-s),
+  * a matrix-free ``A_hat @ V`` (Alg. 2) that never materializes the n x n
+    matrix.
+
+All functions are jit-compatible: the block *budget* is static, only the
+block *indices* are data-dependent, so shapes never change across steps.
+
+Beyond-paper extensions (documented in DESIGN.md §7): causal masking with
+block-level triangular selection, GQA-aware gathering without expanding KV
+heads, per-query-block softmax stabilization derived from the coarse scores,
+and optional key padding masks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9  # finite "minus infinity": exp(NEG_INF - c) underflows to 0, no NaNs
+FORCE_BONUS = 2e9  # added to coarse scores of blocks that must be selected
+
+
+@dataclasses.dataclass(frozen=True)
+class MraConfig:
+    """Configuration of the MRA-2 attention approximation.
+
+    Attributes:
+      block_size: side length b of the (scale-b) blocks. Paper uses 32; the
+        TPU kernel path prefers 128 (one MXU tile per block).
+      blocks_per_row: selection budget expressed as the average number of
+        high-resolution blocks per query-block row; the total budget is
+        ``blocks_per_row * ceil(n / b)``. Paper's Table 7 sweeps this.
+      variant: "full" = MRA-2 (coarse background kept), "sparse" = MRA-2-s.
+      causal: apply an autoregressive mask (block-triangular selection grid,
+        exact masking inside diagonal blocks).
+      force_diagonal: always include the diagonal blocks in the selected set
+        (guarantees every query row has at least one exact block; required
+        for numerical safety of the sparse variant and for causal decoding).
+      softmax_scale: score scale; None -> 1/sqrt(head_dim).
+      compute_dtype: dtype for score computation/accumulation.
+      use_kernel: route the high-resolution block computation through the
+        Pallas TPU kernel (kernels/block_sparse_attn). The pure-jnp path is
+        used for training backward and CPU dry-runs.
+      interpret: run the Pallas kernel in interpret mode (CPU validation).
+    """
+
+    block_size: int = 32
+    blocks_per_row: int = 4
+    variant: str = "full"
+    causal: bool = False
+    force_diagonal: bool = True
+    softmax_scale: Optional[float] = None
+    compute_dtype: jnp.dtype = jnp.float32
+    use_kernel: bool = False
+    interpret: bool = False
+
+    def budget(self, n: int) -> int:
+        nb = -(-n // self.block_size)
+        want = self.blocks_per_row * nb
+        if self.causal:
+            max_blocks = nb * (nb + 1) // 2
+        else:
+            max_blocks = nb * nb
+        return min(want, max_blocks)
+
+
+def block_mean(x: jax.Array, block: int, *, axis: int = -2, dtype=None) -> jax.Array:
+    """Mean-pool ``x`` along ``axis`` in non-overlapping windows of ``block``.
+
+    This is the pyramid downsampling of paper eq. (7) specialized to one
+    level (Q~_b / K~_b / V~_b from Q/K/V). ``dtype`` sets the accumulation
+    dtype (fused into the reduce — no materialized full-tensor cast).
+    """
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    assert n % block == 0, f"length {n} not divisible by block {block}"
+    new_shape = x.shape[:axis] + (n // block, block) + x.shape[axis + 1 :]
+    return jnp.mean(x.reshape(new_shape), axis=axis + 1, dtype=dtype)
+
+
+def block_sum(x: jax.Array, block: int, *, axis: int = -2, dtype=None) -> jax.Array:
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    assert n % block == 0
+    new_shape = x.shape[:axis] + (n // block, block) + x.shape[axis + 1 :]
+    return jnp.sum(x.reshape(new_shape), axis=axis + 1, dtype=dtype)
+
+
+def _pad_to_multiple(x: jax.Array, block: int, axis: int):
+    n = x.shape[axis]
+    pad = (-n) % block
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def _block_grid_mask(nb: int, causal: bool) -> jax.Array:
+    """(nb, nb) boolean mask of *allowed* blocks on the selection grid."""
+    if not causal:
+        return jnp.ones((nb, nb), dtype=bool)
+    r = jnp.arange(nb)
+    return r[:, None] >= r[None, :]
+
+
+def _fine_causal_mask(b: int) -> jax.Array:
+    """(b, b) lower-triangular mask used inside diagonal blocks."""
+    r = jnp.arange(b)
+    return r[:, None] >= r[None, :]
+
+
+def mra2_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cfg: MraConfig,
+    *,
+    key_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """MRA-2 attention.
+
+    Args:
+      q: (B, Hq, N, D) queries.
+      k: (B, Hkv, N, D) keys; Hq must be a multiple of Hkv (GQA).
+      v: (B, Hkv, N, D) values.
+      cfg: approximation config.
+      key_mask: optional (B, N) boolean validity of keys (True = valid).
+
+    Returns:
+      (B, Hq, N, D) attention output in q.dtype.
+    """
+    orig_dtype = q.dtype
+    B, Hq, N, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    b = cfg.block_size
+    scale = cfg.softmax_scale if cfg.softmax_scale is not None else 1.0 / (D**0.5)
+    cdt = cfg.compute_dtype
+
+    q, _ = _pad_to_multiple(q, b, axis=2)
+    k, _ = _pad_to_multiple(k, b, axis=2)
+    v, _ = _pad_to_multiple(v, b, axis=2)
+    n = q.shape[2]
+    nb = n // b
+    m = cfg.budget(n)
+
+    if key_mask is None:
+        key_mask = jnp.arange(n) < N
+        key_mask = jnp.broadcast_to(key_mask[None], (B, n))
+    else:
+        key_mask, _ = _pad_to_multiple(key_mask, b, axis=1)
+
+    km = key_mask.astype(cdt)  # (B, n)
+    kcount = block_sum(km[..., None], b, axis=-2)[..., 0]  # (B, nb) valid keys per block
+    has_valid = kcount > 0
+
+    # ---- pyramid downsample (eq. 7, one level) --------------------------------
+    # masked means so that padded keys do not skew the coarse scores. Keep the
+    # full q/k/v tensors in their input dtype (casting the whole tensor to
+    # fp32 materializes a full-size copy — §Perf iteration Y1); the compute
+    # dtype is applied to the small downsampled tensors and gathered blocks.
+    q_g = q.reshape(B, Hkv, G, n, D)
+    k_c = k
+    v_c = v
+    kmn = km.astype(k.dtype)
+    q_ds = block_mean(q_g, b, axis=-2, dtype=cdt)  # (B, Hkv, G, nb, D)
+    k_ds = block_sum(k_c * kmn[:, None, :, None], b, axis=-2, dtype=cdt) / jnp.maximum(
+        kcount[:, None, :, None], 1.0
+    )  # (B, Hkv, nb, D)
+    v_ds = block_sum(v_c * kmn[:, None, :, None], b, axis=-2, dtype=cdt) / jnp.maximum(
+        kcount[:, None, :, None], 1.0
+    )
+
+    # ---- coarse scores mu (eq. 6) ---------------------------------------------
+    coarse = jnp.einsum("bhgxd,bhyd->bhgxy", q_ds, k_ds) * scale  # (B,Hkv,G,nb,nb)
+    allowed = _block_grid_mask(nb, cfg.causal)[None, None, None]  # (1,1,1,nb,nb)
+    allowed = jnp.logical_and(allowed, has_valid[:, None, None, None, :])
+    coarse_m = jnp.where(allowed, coarse, NEG_INF)
+
+    # ---- selection (Alg. 1, R = {b, 1}) ----------------------------------------
+    sel_scores = coarse_m
+    if cfg.force_diagonal:
+        eye = jnp.eye(nb, dtype=bool)[None, None, None]
+        sel_scores = jnp.where(eye, coarse_m + FORCE_BONUS, coarse_m)
+    flat = sel_scores.reshape(B, Hkv, G, nb * nb)
+    top_vals, top_idx = jax.lax.top_k(flat, m)  # (B,Hkv,G,m)
+    x_idx = top_idx // nb
+    y_idx = top_idx % nb
+    # blocks whose (possibly bonused) score is still NEG_INF were never allowed
+    sel_valid = top_vals > (NEG_INF * 0.5)
+
+    # ---- stabilizer: per-query-block coarse row max ----------------------------
+    c = jnp.max(coarse_m, axis=-1)  # (B,Hkv,G,nb)
+    c = jnp.maximum(c, NEG_INF * 0.5)  # guard rows with no allowed block
+
+    # background support (needed both for the low-res term and for the
+    # stabilizer: c_bg is the max coarse score among *background* blocks —
+    # rows whose background is empty must not be stabilized above their own
+    # fine scores, or every exp underflows and the row dies; see tests)
+    sel_grid = jnp.zeros((B, Hkv, G, nb * nb), bool)
+    sel_grid = jax.vmap(jax.vmap(jax.vmap(lambda z, i, val: z.at[i].set(val))))(
+        sel_grid, top_idx, sel_valid
+    )
+    sel_grid = sel_grid.reshape(B, Hkv, G, nb, nb)
+    bg = jnp.logical_and(allowed, ~sel_grid)
+    if cfg.variant == "full":
+        c_bg = jnp.max(jnp.where(bg, coarse_m, NEG_INF), axis=-1)  # (B,Hkv,G,nb)
+    else:
+        c_bg = jnp.full(c.shape, NEG_INF)
+
+    # ---- high-resolution term ---------------------------------------------------
+    if cfg.use_kernel:
+        # Pallas TPU path (kernels/block_sparse_attn.py). Requires an unpadded,
+        # unmasked sequence (serving/perf path); the jnp path below is the
+        # general/topology-flexible one. The kernel stabilizes with the
+        # block-level coarse max + exp clamp; the jnp path uses the exact
+        # two-level (per-token) stabilizer — mathematically identical, so the
+        # paths agree to fp32 rounding.
+        if N % b != 0:
+            raise ValueError("kernel path requires seq_len % block_size == 0")
+        from repro.kernels.ops import block_sparse_attention
+
+        flags = sel_valid.astype(jnp.int32)
+        if cfg.causal:
+            flags = flags | (2 * (x_idx == y_idx)).astype(jnp.int32)
+        BHG = B * Hkv * G
+        out_f, rs_f = block_sparse_attention(
+            q_g.reshape(BHG, n, D),
+            k_c.reshape(B * Hkv, n, D),
+            v_c.reshape(B * Hkv, n, D),
+            c.reshape(BHG, nb),
+            x_idx.reshape(BHG, m).astype(jnp.int32),
+            y_idx.reshape(BHG, m).astype(jnp.int32),
+            flags.reshape(BHG, m),
+            scale,
+            b,
+            cfg.interpret,
+        )
+        out_hr = out_f.reshape(B, Hkv, G, nb, b, D)
+        rs_hr = rs_f.reshape(B, Hkv, G, nb, b)
+        adj = jnp.ones((B, Hkv, G, nb, b), cdt)
+        c_base = c  # kernel stabilizes with the block-level coarse max
+    else:
+        out_hr, rs_hr, adj = _high_res_jnp(
+            q_g, k_c, v_c, km, c_bg, x_idx, y_idx, sel_valid, cfg, scale, nb
+        )
+        c_base = c_bg
+
+    # ---- low-resolution background (Alg. 2 coarse level) -----------------------
+    if cfg.variant == "full":
+        c_safe = jnp.maximum(c_base, NEG_INF * 0.5)[..., None]
+        # clamp at 0: exact on the background support (coarse_m <= c_bg there)
+        # and keeps the off-support exp finite (where-grad 0*inf guard)
+        a_lr = jnp.where(bg, jnp.exp(jnp.minimum(coarse_m - c_safe, 0.0)), 0.0)
+        w_lr = a_lr * kcount[:, None, None, None, :]  # sum over block = mu * (#valid keys)
+        out_lr = jnp.einsum("bhgxy,bhyd->bhgxd", w_lr, v_ds)  # (B,Hkv,G,nb,D)
+        rs_lr = jnp.sum(w_lr, axis=-1)  # (B,Hkv,G,nb)
+        # adj = exp(c_base - c_tok) rescales the block-stabilized background to
+        # the per-token stabilizer (two-level stabilization; see _high_res_jnp)
+        out_hr = out_hr + adj[..., None] * out_lr[..., None, :]
+        rs_hr = rs_hr + adj * rs_lr[..., None]
+
+    # guarded normalization: rows can only be empty in pathological configs
+    # (no forced diagonal); never let a ~0 denominator explode gradients
+    alive = rs_hr > 0
+    out = jnp.where(alive[..., None], out_hr, 0.0) / jnp.where(alive, rs_hr, 1.0)[..., None]
+    out = out.reshape(B, Hq, n, D)[:, :, :N]
+    return out.astype(orig_dtype)
+
+
+def _high_res_jnp(q_g, k_c, v_c, km, c_bg, x_idx, y_idx, sel_valid, cfg, scale, nb):
+    """Gather-einsum-scatter implementation of the high-resolution term.
+
+    ``c_bg`` is the per-query-block max coarse score over *background* blocks
+    (NEG_INF when the background is empty / the sparse variant). The token
+    stabilizer is c_tok = max(fine row max, c_bg) — the max over everything
+    that actually enters the softmax, so the largest term is exp(0) = 1 and
+    rows can neither overflow nor underflow to zero.
+    """
+    B, Hkv, G, n, D = q_g.shape
+    b = cfg.block_size
+    cdt = cfg.compute_dtype
+    q_blocks = q_g.reshape(B, Hkv, G, nb, b, D)
+    k_blocks = k_c.reshape(B, Hkv, nb, b, D)
+    v_blocks = v_c.reshape(B, Hkv, nb, b, D)
+    km_blocks = km.reshape(B, nb, b)
+
+    # gather in input dtype, cast the gathered blocks only (§Perf Y1: casting
+    # the full tensors first materializes fp32 copies of q/k/v)
+    q_sel = jnp.take_along_axis(
+        q_blocks, x_idx[..., None, None], axis=3
+    ).astype(cdt)  # (B,Hkv,G,m,b,D)
+    k_sel = jnp.take_along_axis(
+        k_blocks[:, :, None], jnp.broadcast_to(y_idx[..., None, None], y_idx.shape + (1, 1)), axis=3
+    ).astype(cdt)  # (B,Hkv,G,m,b,D) via broadcast of k over G
+    v_sel = jnp.take_along_axis(
+        v_blocks[:, :, None], jnp.broadcast_to(y_idx[..., None, None], y_idx.shape + (1, 1)), axis=3
+    ).astype(cdt)
+    km_sel = jnp.take_along_axis(
+        km_blocks[:, None, None], jnp.broadcast_to(y_idx[..., None], y_idx.shape + (1,)), axis=3
+    )  # (B,Hkv,G,m,b)
+
+    s = jnp.einsum("bhgmid,bhgmjd->bhgmij", q_sel, k_sel) * scale  # (B,Hkv,G,m,b,b)
+    fine_ok = km_sel[..., None, :] > 0  # key validity within block
+    if cfg.causal:
+        diag = (x_idx == y_idx)[..., None, None]
+        tri = _fine_causal_mask(b)[None, None, None, None]
+        fine_ok = jnp.logical_and(fine_ok, jnp.logical_or(~diag, tri))
+    fine_ok = jnp.logical_and(fine_ok, sel_valid[..., None, None])
+
+    def _seg_add(z, i, u):
+        return z.at[i].add(u)
+
+    def _seg_max(z, i, u):
+        return z.at[i].max(u)
+
+    seg = jax.vmap(jax.vmap(jax.vmap(_seg_add)))
+    seg_max = jax.vmap(jax.vmap(jax.vmap(_seg_max)))
+
+    # two-level stabilizer: c_tok[i] = max(coarse row max, max over the
+    # selected blocks' true scores in row i). exp never overflows, and the
+    # masked-out exp arguments can no longer poison gradients with 0 * inf.
+    s_for_max = jnp.where(fine_ok, s, NEG_INF)
+    row_max_blk = jnp.max(s_for_max, axis=-1)  # (B,Hkv,G,m,b)
+    fine_max = seg_max(
+        jnp.full((B, Hkv, G, nb, b), NEG_INF, cdt), x_idx, row_max_blk
+    )  # (B,Hkv,G,nb,b)
+    c_tok = jnp.maximum(fine_max, c_bg[..., None])  # (B,Hkv,G,nb,b)
+    c_tok = jax.lax.stop_gradient(c_tok)
+    adj = jnp.exp(c_bg[..., None] - c_tok)  # (B,Hkv,G,nb,b), in (0, 1]
+
+    c_sel = jnp.take_along_axis(
+        c_tok, x_idx[..., None], axis=-2
+    )  # (B,Hkv,G,m,b) per-token stabilizer for each selected block
+    s = s - c_sel[..., None]
+    a = jnp.where(fine_ok, jnp.exp(jnp.minimum(s, 80.0)), 0.0)  # (B,Hkv,G,m,b,b)
+
+    o_blk = jnp.einsum("bhgmij,bhgmjd->bhgmid", a, v_sel)  # (B,Hkv,G,m,b,D)
+    r_blk = jnp.sum(a, axis=-1)  # (B,Hkv,G,m,b)
+
+    # scatter-add per query block (sequential-grid-equivalent of CUDA atomics)
+    zero_o = jnp.zeros((B, Hkv, G, nb, b, D), cdt)
+    zero_r = jnp.zeros((B, Hkv, G, nb, b), cdt)
+    out_hr = seg(zero_o, x_idx, o_blk)  # (B,Hkv,G,nb,b,D)
+    rs_hr = seg(zero_r, x_idx, r_blk)  # (B,Hkv,G,nb,b)
+    return out_hr, rs_hr, adj
+
+
+def full_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    softmax_scale: Optional[float] = None,
+    key_mask: Optional[jax.Array] = None,
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """Exact softmax attention oracle (GQA aware). O(n^2)."""
+    B, Hq, N, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / (D**0.5)
+    qg = q.reshape(B, Hkv, G, N, D).astype(compute_dtype)
+    s = jnp.einsum("bhgid,bhjd->bhgij", qg, k.astype(compute_dtype)) * scale
+    if causal:
+        r = jnp.arange(N)
+        s = jnp.where((r[:, None] >= r[None, :])[None, None, None], s, NEG_INF)
+    if key_mask is not None:
+        s = jnp.where(key_mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgij,bhjd->bhgid", p, v.astype(compute_dtype))
+    return out.reshape(B, Hq, N, D).astype(q.dtype)

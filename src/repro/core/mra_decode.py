@@ -1,0 +1,202 @@
+"""MRA-2 attention for autoregressive decode (one query vs. a long KV cache).
+
+The paper evaluates bidirectional encoders; this module is the beyond-paper
+adaptation of the same two-level scheme to decoding (DESIGN.md §7): the KV
+cache is viewed as ``nb = S/b`` key blocks, coarse scores
+``mu_y = exp(q (K~_b)_y^T * scale)`` pick the top-``m`` blocks for *exact*
+attention, all remaining valid blocks contribute the coarse background
+(``variant="full"``) exactly as in the prefill formulation with a 1-row query
+block. Complexity per decoded token: O(S/b + m*b) instead of O(S) — this is
+what makes the ``long_500k`` shapes sub-quadratic end-to-end.
+
+An incrementally-maintained block-sum pyramid (``PyramidState``) makes the
+coarse scores O(1) to update per appended token instead of O(S) to recompute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .mra import MraConfig, NEG_INF, FORCE_BONUS
+
+
+class PyramidState(NamedTuple):
+    """Incremental block-sum pyramid over the KV cache.
+
+    k_sum / v_sum: (B, Hkv, nb, D) running sums of keys/values per block.
+    The block mean is ``sum / count`` with ``count`` derived from ``length``.
+    """
+
+    k_sum: jax.Array
+    v_sum: jax.Array
+
+    @staticmethod
+    def init(batch: int, kv_heads: int, nb: int, d: int, dtype=jnp.float32):
+        z = jnp.zeros((batch, kv_heads, nb, d), dtype)
+        return PyramidState(z, z)
+
+    def append(self, k_new: jax.Array, v_new: jax.Array, pos: jax.Array, block: int):
+        """Add one token's K/V at position ``pos`` (per-batch array (B,))."""
+        blk = pos // block  # (B,)
+        b_idx = jnp.arange(self.k_sum.shape[0])
+        k_sum = self.k_sum.at[b_idx, :, blk].add(k_new.astype(self.k_sum.dtype))
+        v_sum = self.v_sum.at[b_idx, :, blk].add(v_new.astype(self.v_sum.dtype))
+        return PyramidState(k_sum, v_sum)
+
+
+def block_counts(lengths: jax.Array, nb: int, block: int) -> jax.Array:
+    """(B, nb) number of valid tokens per key block given valid ``lengths``."""
+    starts = jnp.arange(nb) * block
+    return jnp.clip(lengths[:, None] - starts[None, :], 0, block)
+
+
+def quantize_kv(x: jax.Array):
+    """Per-token-per-head int8 quantization. x (B,H,*,D) -> (int8, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def mra2_decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    cfg: MraConfig,
+    *,
+    decode_blocks: int = 16,
+    pyramid: Optional[PyramidState] = None,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """One-step decode attention with MRA block selection.
+
+    Args:
+      q: (B, Hq, 1, D) the new token's query.
+      k_cache/v_cache: (B, Hkv, S, D), S a static multiple of cfg.block_size.
+      lengths: (B,) valid prefix length (includes the token being decoded).
+      cfg: MraConfig (block_size, variant, compute dtype are honored).
+      decode_blocks: selection budget m (number of exact key blocks).
+      pyramid: optional incremental block sums; recomputed from the cache
+        when absent.
+      k_scale/v_scale: (B, Hkv, S) per-token dequant scales when the cache is
+        int8 (§Perf Y3); gathered blocks are dequantized after the gather.
+
+    Returns:
+      (B, Hq, 1, D) attention output.
+    """
+    B, Hq, _, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    b = cfg.block_size
+    assert S % b == 0, (S, b)
+    nb = S // b
+    m = min(decode_blocks, nb)
+    scale = cfg.softmax_scale if cfg.softmax_scale is not None else 1.0 / (D**0.5)
+    cdt = cfg.compute_dtype
+
+    counts = block_counts(lengths, nb, b).astype(cdt)  # (B, nb)
+    if pyramid is None:
+        mask = (jnp.arange(S) < lengths[:, None]).astype(k_cache.dtype)  # (B, S)
+        k_sum = jnp.sum(
+            (k_cache * mask[:, None, :, None]).reshape(B, Hkv, nb, b, D),
+            axis=3, dtype=cdt,
+        )
+        v_sum = jnp.sum(
+            (v_cache * mask[:, None, :, None]).reshape(B, Hkv, nb, b, D),
+            axis=3, dtype=cdt,
+        )
+    else:
+        k_sum, v_sum = pyramid.k_sum.astype(cdt), pyramid.v_sum.astype(cdt)
+
+    denom = jnp.maximum(counts, 1.0)[:, None, :, None]
+    k_ds = k_sum / denom  # (B, Hkv, nb, D)
+    v_ds = v_sum / denom
+
+    qg = q.reshape(B, Hkv, G, D).astype(cdt)
+    coarse = jnp.einsum("bhgd,bhyd->bhgy", qg, k_ds) * scale  # (B, Hkv, G, nb)
+    valid = counts > 0  # (B, nb)
+    coarse_m = jnp.where(valid[:, None, None, :], coarse, NEG_INF)
+
+    # always select the newest (possibly partial) block: exact local context and
+    # the only partially-filled block, so background blocks are always full.
+    last_blk = jnp.clip((lengths - 1) // b, 0, nb - 1)  # (B,)
+    sel_scores = coarse_m + FORCE_BONUS * (
+        jnp.arange(nb)[None, None, None, :] == last_blk[:, None, None, None]
+    )
+    top_vals, y_idx = jax.lax.top_k(sel_scores, m)  # (B, Hkv, G, m)
+    sel_ok = top_vals > NEG_INF * 0.5
+
+    c = jnp.maximum(jnp.max(coarse_m, axis=-1), NEG_INF * 0.5)  # (B, Hkv, G)
+
+    # ---- exact term over selected blocks -----------------------------------
+    # gather in the cache dtype and cast the (small) gathered blocks only:
+    # casting the whole cache first materializes a full fp32 copy (16 GiB at
+    # 32k x 128 batch) and blocks buffer donation — §Perf iteration Y1.
+    k_blocks = k_cache.reshape(B, Hkv, nb, b, D)
+    v_blocks = v_cache.reshape(B, Hkv, nb, b, D)
+    gidx = jnp.broadcast_to(y_idx[..., None, None], y_idx.shape + (1, 1))
+    k_sel = jnp.take_along_axis(k_blocks[:, :, None], gidx, axis=3).astype(cdt)
+    v_sel = jnp.take_along_axis(v_blocks[:, :, None], gidx, axis=3).astype(cdt)
+    if k_scale is not None:  # int8 cache: dequantize the gathered blocks only
+        gs = jnp.broadcast_to(y_idx[..., None], y_idx.shape + (1,))
+        ks = jnp.take_along_axis(
+            k_scale.reshape(B, Hkv, nb, b)[:, :, None], gs, axis=3).astype(cdt)
+        vs = jnp.take_along_axis(
+            v_scale.reshape(B, Hkv, nb, b)[:, :, None], gs, axis=3).astype(cdt)
+        k_sel = k_sel * ks[..., None]
+        v_sel = v_sel * vs[..., None]
+
+    s = jnp.einsum("bhgd,bhgmjd->bhgmj", qg, k_sel) * scale  # (B,Hkv,G,m,b)
+    pos = y_idx[..., None] * b + jnp.arange(b)  # (B,Hkv,G,m,b) global positions
+    ok = (pos < lengths[:, None, None, None, None]) & sel_ok[..., None]
+    # two-level stabilizer (see mra.py): per-query max over the selected
+    # blocks' true scores, combined with the coarse max.
+    fine_max = jnp.max(jnp.where(ok, s, NEG_INF), axis=(-1, -2))
+    c_tok = jax.lax.stop_gradient(jnp.maximum(c, fine_max))  # (B,Hkv,G)
+    adj = jnp.exp(c - c_tok)
+    a = jnp.where(ok, jnp.exp(jnp.minimum(s - c_tok[..., None, None], 80.0)), 0.0)
+    out = jnp.einsum("bhgmj,bhgmjd->bhgd", a, v_sel)
+    rs = jnp.sum(a, axis=(-1, -2))  # (B,Hkv,G)
+
+    # ---- coarse background ---------------------------------------------------
+    if cfg.variant == "full":
+        sel_grid = jnp.zeros((B, Hkv, G, nb), bool)
+        sel_grid = jax.vmap(jax.vmap(jax.vmap(lambda z, i, val: z.at[i].set(val))))(
+            sel_grid, y_idx, sel_ok
+        )
+        bg = valid[:, None, None, :] & ~sel_grid
+        w = jnp.where(bg, jnp.exp(coarse_m - c[..., None]), 0.0) * counts[:, None, None, :]
+        w = w * adj[..., None]
+        out = out + jnp.einsum("bhgy,bhyd->bhgd", w, v_ds)
+        rs = rs + jnp.sum(w, axis=-1)
+
+    alive = rs > 0
+    out = jnp.where(alive[..., None], out, 0.0) / jnp.where(alive, rs, 1.0)[..., None]
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+def full_decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    softmax_scale: Optional[float] = None,
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """Exact decode attention oracle. O(S) per token."""
+    B, Hq, _, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / (D**0.5)
+    qg = q.reshape(B, Hkv, G, D).astype(compute_dtype)
+    s = jnp.einsum("bhgd,bhjd->bhgj", qg, k_cache.astype(compute_dtype)) * scale
+    s = jnp.where((jnp.arange(S) < lengths[:, None])[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgj,bhjd->bhgd", p, v_cache.astype(compute_dtype))
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)

@@ -1,0 +1,126 @@
+"""Deterministic synthetic data pipeline (offline container; DESIGN.md §7).
+
+Streams are seeded and reproducible across restarts (step -> same batch), so
+checkpoint/restart resumes bit-identically without data-state checkpointing
+beyond the step counter. Structure matters for the paper's technique: token
+streams mix Zipfian unigrams with copy/Markov structure so attention has the
+locality MRA exploits; audio frames are temporally-correlated random walks.
+
+Host sharding: each process materializes only its slice (process_index /
+process_count), standard multi-host JAX data loading. A double-buffered
+prefetch thread overlaps host data generation with device steps.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCfg
+
+
+def _rng_for_step(seed: int, step: int, shard: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, step, shard]))
+
+
+def _lm_tokens(rng: np.random.Generator, batch: int, seq: int, vocab: int) -> np.ndarray:
+    """Zipfian unigrams + local copy structure (gives MRA-friendly locality)."""
+    ranks = np.arange(1, vocab + 1)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    toks = rng.choice(vocab, size=(batch, seq), p=probs).astype(np.int32)
+    # copy spans: each sequence repeats an earlier span at a random offset
+    n_spans = max(1, seq // 256)
+    for b in range(batch):
+        for _ in range(n_spans):
+            ln = min(int(rng.integers(8, 33)), max(seq // 3, 1))
+            if seq < 3 * ln:
+                continue
+            src = int(rng.integers(0, seq - 2 * ln + 1))
+            dst = int(rng.integers(src + ln, seq - ln + 1))
+            toks[b, dst : dst + ln] = toks[b, src : src + ln]
+    return toks
+
+
+def _audio_frames(rng, batch, seq, dim):
+    steps = rng.standard_normal((batch, seq, dim)).astype(np.float32) * 0.3
+    frames = np.cumsum(steps, axis=1)
+    frames /= np.maximum(np.abs(frames).max(axis=(1, 2), keepdims=True), 1.0)
+    return frames
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeCfg, *, step: int = 0, seed: int = 0,
+               shard: int = 0, num_shards: int = 1, batch_override: Optional[int] = None):
+    """One host-local training/prefill batch as numpy arrays."""
+    B = batch_override if batch_override is not None else shape.global_batch // num_shards
+    S = shape.seq_len
+    rng = _rng_for_step(seed, step, shard)
+    if cfg.family == "hubert":
+        frames = _audio_frames(rng, B, S, cfg.frontend_dim)
+        mask = rng.random((B, S)) < 0.08
+        proj = _rng_for_step(seed, 0, 0).standard_normal((cfg.frontend_dim, cfg.vocab))
+        targets = (frames @ proj.astype(np.float32)).argmax(-1).astype(np.int32)
+        return {"frames": frames, "mask_positions": mask, "targets": targets}
+    if cfg.family == "internvl":
+        P = cfg.num_patches
+        S_text = S - P
+        toks = _lm_tokens(rng, B, S_text + 1, cfg.vocab)
+        patches = _audio_frames(rng, B, P, cfg.frontend_dim)
+        return {
+            "tokens": toks[:, :-1],
+            "patches": patches,
+            "targets": toks[:, 1:].astype(np.int32),
+        }
+    toks = _lm_tokens(rng, B, S + 1, cfg.vocab)
+    return {"tokens": toks[:, :-1], "targets": toks[:, 1:].astype(np.int32)}
+
+
+class DataLoader:
+    """Double-buffered prefetching loader over ``make_batch``."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeCfg, *, seed: int = 0,
+                 start_step: int = 0, shard: int = 0, num_shards: int = 1,
+                 batch_override: Optional[int] = None, prefetch: int = 2):
+        self.cfg, self.shape = cfg, shape
+        self.seed, self.shard, self.num_shards = seed, shard, num_shards
+        self.batch_override = batch_override
+        self._step = start_step
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = make_batch(
+                self.cfg, self.shape, step=step, seed=self.seed,
+                shard=self.shard, num_shards=self.num_shards,
+                batch_override=self.batch_override,
+            )
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.5)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        step, batch = self._q.get()
+        return step, batch
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,6 @@
+from .sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    logical_to_pspec,
+    named_sharding,
+)

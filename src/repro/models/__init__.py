@@ -1,0 +1,10 @@
+from .params import (
+    ParamSpec,
+    abstract_params,
+    cast_tree,
+    count_params,
+    init_params,
+    param_pspecs,
+    param_shardings,
+)
+from .registry import get_model

@@ -1,0 +1,260 @@
+"""Shared neural-net layers (pure JAX, ParamSpec-declared)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.attention import AttentionSpec, decode_attention, self_attention
+from .params import ParamSpec
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def rms_norm(x, w, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, w, b, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm_specs(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"w": ParamSpec((d,), ("d_model",), init="ones"),
+                "b": ParamSpec((d,), ("d_model",), init="zeros")}
+    return {"w": ParamSpec((d,), ("d_model",), init="ones")}
+
+
+def apply_norm(x, p, cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (B, H, S, Hd); positions (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (S, hd/2) or (B, S, hd/2)
+    if ang.ndim == 3:  # per-batch positions (decode): insert the head axis
+        ang = ang[:, None]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Attention block (GQA, optional qkv-bias / qk-norm, MRA-switchable)
+# --------------------------------------------------------------------------- #
+def attn_specs(cfg: ModelConfig):
+    d, Hkv, hd = cfg.d_model, cfg.kv_heads, cfg.hd
+    H = cfg.padded_heads  # == num_heads unless pad_attn_heads_to is set
+    p = {
+        "wq": ParamSpec((d, H, hd), ("d_model", "heads", None), dtype=cfg.pdt),
+        "wk": ParamSpec((d, Hkv, hd), ("d_model", "kv_heads", None), dtype=cfg.pdt),
+        "wv": ParamSpec((d, Hkv, hd), ("d_model", "kv_heads", None), dtype=cfg.pdt),
+        "wo": ParamSpec((H, hd, d), ("heads", None, "d_model"), dtype=cfg.pdt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamSpec((H, hd), ("heads", None), dtype=cfg.pdt, init="zeros")
+        p["bk"] = ParamSpec((Hkv, hd), ("kv_heads", None), dtype=cfg.pdt, init="zeros")
+        p["bv"] = ParamSpec((Hkv, hd), ("kv_heads", None), dtype=cfg.pdt, init="zeros")
+    if cfg.qk_norm:
+        p["qnorm"] = ParamSpec((cfg.hd,), (None,), dtype=cfg.pdt, init="ones")
+        p["knorm"] = ParamSpec((cfg.hd,), (None,), dtype=cfg.pdt, init="ones")
+    return p
+
+
+def head_mask(cfg: ModelConfig):
+    """(padded_heads,) 1 for real heads, 0 for TP padding."""
+    return (jnp.arange(cfg.padded_heads) < cfg.num_heads)
+
+
+def qkv_project(x, p, cfg: ModelConfig, positions):
+    """x (B,S,d) -> q (B,H,S,hd), k/v (B,Hkv,S,hd), rope applied.
+
+    With cfg.pad_attn_heads_to set, H is the padded head count (the padded
+    heads are masked at the output projection in attn_block)."""
+    adt = x.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(adt))
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(adt))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(adt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(adt)[None, :, None, :]
+        k = k + p["bk"].astype(adt)[None, :, None, :]
+        v = v + p["bv"].astype(adt)[None, :, None, :]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"], cfg.norm_eps)
+        k = rms_norm(k, p["knorm"], cfg.norm_eps)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def expand_kv_slots(k, v, cfg: ModelConfig):
+    """Expand the KV head axis to cfg.kv_slots (TP sharding; weights shared)."""
+    rep = cfg.kv_slots // cfg.kv_heads
+    if rep == 1:
+        return k, v
+    return jnp.repeat(k, rep, axis=1), jnp.repeat(v, rep, axis=1)
+
+
+def _tp_attn_constraint(cfg: ModelConfig, *arrays):
+    """Shard (B, H, S, D) activations over (data, model) when padding is on."""
+    from repro.distributed import mesh_utils
+
+    mesh = mesh_utils.get_mesh()
+    if cfg.pad_attn_heads_to <= 0 or mesh is None or "model" not in mesh.shape:
+        return arrays
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = mesh_utils.dp_axes(mesh)
+    out = []
+    for a in arrays:
+        if a.shape[1] % mesh.shape["model"] == 0:
+            sh = NamedSharding(mesh, P(dp, "model", None, None))
+            a = jax.lax.with_sharding_constraint(a, sh)
+        out.append(a)
+    return tuple(out)
+
+
+def attn_block(x, p, cfg: ModelConfig, *, spec: Optional[AttentionSpec] = None,
+               key_mask=None, positions=None):
+    """Full-sequence attention block (training / prefill-without-cache)."""
+    B, S, d = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    spec = spec or cfg.attention
+    q, k, v = qkv_project(x, p, cfg, positions)
+    k, v = expand_kv_slots(k, v, cfg)
+    q, k, v = _tp_attn_constraint(cfg, q, k, v)
+    o = self_attention(q, k, v, spec, causal=cfg.causal, key_mask=key_mask)
+    if cfg.padded_heads != cfg.num_heads:
+        o = o * head_mask(cfg)[None, :, None, None].astype(o.dtype)
+    return jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def attn_block_decode(x, p, cfg: ModelConfig, k_cache, v_cache, lengths, *,
+                      spec: Optional[AttentionSpec] = None, pyramid=None):
+    """One-token decode. x (B,1,d); returns (out (B,1,d), k_new, v_new).
+
+    The KV cache stores the *real* kv_heads (no slot expansion — decode is
+    memory-bound); padded query heads still work since Hq_pad % kv_heads == 0.
+    """
+    spec = spec or cfg.attention
+    positions = (lengths - 1)[:, None]  # (B,1)
+    q, k_new, v_new = qkv_project(x, p, cfg, positions)
+    b_idx = jnp.arange(x.shape[0])
+    k_cache = k_cache.at[b_idx, :, lengths - 1].set(k_new[:, :, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[b_idx, :, lengths - 1].set(v_new[:, :, 0].astype(v_cache.dtype))
+    o = decode_attention(q, k_cache, v_cache, lengths, spec, pyramid=pyramid)
+    if cfg.padded_heads != cfg.num_heads:
+        o = o * head_mask(cfg)[None, :, None, None].astype(o.dtype)
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, k_cache, v_cache
+
+
+# --------------------------------------------------------------------------- #
+# MLP
+# --------------------------------------------------------------------------- #
+def mlp_specs(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "wi": ParamSpec((d, f), ("d_model", "d_ff"), dtype=cfg.pdt),
+            "wg": ParamSpec((d, f), ("d_model", "d_ff"), dtype=cfg.pdt),
+            "wo": ParamSpec((f, d), ("d_ff", "d_model"), dtype=cfg.pdt),
+        }
+    return {
+        "wi": ParamSpec((d, f), ("d_model", "d_ff"), dtype=cfg.pdt),
+        "bi": ParamSpec((f,), ("d_ff",), dtype=cfg.pdt, init="zeros"),
+        "wo": ParamSpec((f, d), ("d_ff", "d_model"), dtype=cfg.pdt),
+        "bo": ParamSpec((d,), ("d_model",), dtype=cfg.pdt, init="zeros"),
+    }
+
+
+def mlp_block(x, p, cfg: ModelConfig):
+    adt = x.dtype
+    if cfg.act == "swiglu":
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(adt))
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(adt))
+        h = jax.nn.silu(g) * h
+        return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(adt))
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(adt)) + p["bi"].astype(adt)
+    h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(adt)) + p["bo"].astype(adt)
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / head
+# --------------------------------------------------------------------------- #
+def embed_specs(cfg: ModelConfig):
+    # vocab padded to cfg.pad_vocab_to so the table/logits shard over TP even
+    # for odd vocabs (granite 49155, internvl 151655); loss masks the padding.
+    V = cfg.padded_vocab
+    p = {"tok": ParamSpec((V, cfg.d_model), ("vocab", "d_model"),
+                          dtype=cfg.pdt, init="embed")}
+    if cfg.pos == "learned":
+        p["pos"] = ParamSpec((cfg.max_seq, cfg.d_model), (None, "d_model"),
+                             dtype=cfg.pdt, init="embed")
+    if not cfg.tie_embeddings:
+        p["head"] = ParamSpec((cfg.d_model, V), ("d_model", "vocab"),
+                              dtype=cfg.pdt)
+    return p
+
+
+def embed(tokens, p, cfg: ModelConfig, positions=None):
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.adt)
+    if cfg.pos == "learned":
+        if positions is None:
+            positions = jnp.arange(tokens.shape[-1])
+        x = x + jnp.take(p["pos"], positions, axis=0).astype(cfg.adt)
+    return x
+
+
+def unembed(x, p, cfg: ModelConfig):
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+
+
+def lm_nll(logits, targets, cfg: ModelConfig):
+    """Per-position NLL with padded-vocab masking. logits (..., padded_vocab)."""
+    lf = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:
+        pad_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        lf = jnp.where(pad_ok, lf, -1e9)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return lse - ll
+
+
+def remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn

@@ -1,0 +1,358 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU + local attention, 1:2.
+
+Temporal blocks repeat the pattern (rglru, rglru, local): two gated-linear-
+recurrence blocks per local-attention block. The RG-LRU diagonal recurrence
+
+    a_t = exp(-c * softplus(Lambda) * r_t)          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+is evaluated with ``jax.lax.associative_scan`` (log-depth, no while loop —
+accurate XLA cost analysis, DESIGN.md §6). Local attention is MQA
+(kv_heads=1) over a sliding window; the window cache is a ring buffer so
+``long_500k`` decoding needs O(window) memory — the arch's selling point.
+
+MRA applies to the local-attention layers only (DESIGN.md §5): set
+``cfg.attention.kind="mra2"`` to route them through the paper's scheme.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.attention import AttentionSpec, self_attention
+from . import layers as L
+from .params import ParamSpec
+
+_C = 8.0  # RG-LRU decay sharpness constant (Griffin paper)
+
+
+def _pattern(cfg: ModelConfig):
+    pat = cfg.block_pattern or ("rglru", "rglru", "local")
+    return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+
+
+# --------------------------------------------------------------------------- #
+# Specs
+# --------------------------------------------------------------------------- #
+def _rglru_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or cfg.d_model
+    pdt = cfg.pdt
+    return {
+        "wx": ParamSpec((d, w), ("d_model", "d_ff"), dtype=pdt),
+        "wy": ParamSpec((d, w), ("d_model", "d_ff"), dtype=pdt),
+        "conv_w": ParamSpec((cfg.conv1d_width, w), (None, "d_ff"), dtype=pdt, scale=0.1),
+        "conv_b": ParamSpec((w,), ("d_ff",), dtype=pdt, init="zeros"),
+        "wa": ParamSpec((w, w), ("d_ff", None), dtype=pdt, scale=0.01),
+        "ba": ParamSpec((w,), (None,), dtype=pdt, init="zeros"),
+        "wi": ParamSpec((w, w), ("d_ff", None), dtype=pdt, scale=0.01),
+        "bi": ParamSpec((w,), (None,), dtype=pdt, init="zeros"),
+        "lam": ParamSpec((w,), ("d_ff",), dtype=pdt, init="embed", scale=0.5),
+        "wo": ParamSpec((w, d), ("d_ff", "d_model"), dtype=pdt),
+    }
+
+
+def layer_specs(cfg: ModelConfig, kind: str):
+    p = {"ln1": L.norm_specs(cfg), "ln2": L.norm_specs(cfg)}
+    if kind == "local":
+        p["attn"] = L.attn_specs(cfg)
+    else:
+        p["rglru"] = _rglru_specs(cfg)
+    p["mlp"] = L.mlp_specs(cfg)
+    return p
+
+
+def param_specs(cfg: ModelConfig):
+    kinds = _pattern(cfg)
+    if cfg.scan_layers:
+        from .params import stack_specs
+
+        pat = cfg.block_pattern or ("rglru", "rglru", "local")
+        n_groups = cfg.num_layers // len(pat)
+        tail = kinds[n_groups * len(pat) :]
+        return {
+            "embed": L.embed_specs(cfg),
+            "ln_f": L.norm_specs(cfg),
+            "groups": stack_specs([layer_specs(cfg, k) for k in pat], n_groups),
+            "tail": [layer_specs(cfg, k) for k in tail],
+        }
+    return {
+        "embed": L.embed_specs(cfg),
+        "ln_f": L.norm_specs(cfg),
+        "layers": [layer_specs(cfg, k) for k in kinds],
+    }
+
+
+def _layers_iter(params, cfg: ModelConfig):
+    """(kind, layer-params) pairs regardless of stacking."""
+    kinds = _pattern(cfg)
+    if not cfg.scan_layers:
+        return list(zip(kinds, params["layers"]))
+    from .params import layer_slice
+
+    pat = cfg.block_pattern or ("rglru", "rglru", "local")
+    n_groups = cfg.num_layers // len(pat)
+    out = []
+    for i in range(n_groups):
+        grp = layer_slice(params["groups"], i)
+        for j, kind in enumerate(pat):
+            out.append((kind, grp[j]))
+    for kind, p in zip(kinds[n_groups * len(pat) :], params["tail"]):
+        out.append((kind, p))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU block
+# --------------------------------------------------------------------------- #
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x (B,T,W); w (K,W). state (B,K-1,W) or None."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    return out + b.astype(x.dtype)
+
+
+def _rglru_scan(a, bx):
+    """h_t = a_t h_{t-1} + bx_t via associative scan over T. a/bx (B,T,W)."""
+
+    def combine(u, v):
+        au, bu = u
+        av, bv = v
+        return au * av, av * bu + bv
+
+    return jax.lax.associative_scan(combine, (a, bx), axis=1)
+
+
+def _decay(lam, gate):
+    log_a = -_C * jax.nn.softplus(lam.astype(jnp.float32)) * gate
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) with a = exp(log_a): use expm1 for stability near a=1
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    return a, mult
+
+
+def rglru_block(x, p, cfg: ModelConfig):
+    """x (B,T,d) -> (B,T,d)."""
+    adt = x.dtype
+    u = jnp.einsum("btd,dw->btw", x, p["wx"].astype(adt))
+    y = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["wy"].astype(adt)))
+    u = _causal_conv(u, p["conv_w"], p["conv_b"])
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wa"].astype(jnp.float32) + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["wi"].astype(jnp.float32) + p["bi"].astype(jnp.float32))
+    a, mult = _decay(p["lam"], r)
+    _, h = _rglru_scan(a, mult * (i * uf))
+    out = (h.astype(adt) * y)
+    return jnp.einsum("btw,wd->btd", out, p["wo"].astype(adt))
+
+
+# --------------------------------------------------------------------------- #
+# Full-sequence forward
+# --------------------------------------------------------------------------- #
+def _local_spec(cfg: ModelConfig) -> AttentionSpec:
+    if cfg.attention.kind in ("mra2", "mra2_s"):
+        return cfg.attention
+    import dataclasses
+
+    return dataclasses.replace(cfg.attention, kind="local", local_window=cfg.local_window)
+
+
+def forward(params, cfg: ModelConfig, batch, *, key_mask=None):
+    x = L.embed(batch["tokens"], params["embed"], cfg)
+
+    def body(x, p, kind):
+        h = L.apply_norm(x, p["ln1"], cfg)
+        if kind == "local":
+            x = x + L.attn_block(h, p["attn"], cfg, spec=_local_spec(cfg),
+                                 key_mask=key_mask)
+        else:
+            x = x + rglru_block(h, p["rglru"], cfg)
+        h = L.apply_norm(x, p["ln2"], cfg)
+        return x + L.mlp_block(h, p["mlp"], cfg)
+
+    if cfg.scan_layers:
+        pat = cfg.block_pattern or ("rglru", "rglru", "local")
+
+        def group_body(x, grp):
+            for j, kind in enumerate(pat):
+                x = body(x, grp[j], kind)
+            return x, None
+
+        x, _ = jax.lax.scan(L.remat_wrap(group_body, cfg), x, params["groups"])
+        n_groups = cfg.num_layers // len(pat)
+        kinds = _pattern(cfg)[n_groups * len(pat) :]
+        for p, kind in zip(params["tail"], kinds):
+            fn = L.remat_wrap(functools.partial(body, kind=kind), cfg)
+            x = fn(x, p)
+    else:
+        for kind, p in _layers_iter(params, cfg):
+            fn = L.remat_wrap(functools.partial(body, kind=kind), cfg)
+            x = fn(x, p)
+    x = L.apply_norm(x, params["ln_f"], cfg)
+    return L.unembed(x, params["embed"], cfg), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, key_mask=None):
+    logits, _ = forward(params, cfg, batch)
+    loss = jnp.mean(L.lm_nll(logits, batch["targets"], cfg))
+    return loss, {"loss": loss, "nll": loss}
+
+
+# --------------------------------------------------------------------------- #
+# Serving
+# --------------------------------------------------------------------------- #
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    kinds = _pattern(cfg)
+    n_attn = sum(1 for k in kinds if k == "local")
+    n_rec = len(kinds) - n_attn
+    w = cfg.lru_width or cfg.d_model
+    W = min(cfg.local_window, max_len)
+    return {
+        "k": ParamSpec((n_attn, batch, cfg.kv_heads, W, cfg.hd),
+                       (None, "batch", None, None, None), dtype=cfg.adt, init="zeros"),
+        "v": ParamSpec((n_attn, batch, cfg.kv_heads, W, cfg.hd),
+                       (None, "batch", None, None, None), dtype=cfg.adt, init="zeros"),
+        "kv_pos": ParamSpec((n_attn, batch, W), (None, "batch", None),
+                            dtype=jnp.int32, init="zeros"),
+        "h": ParamSpec((n_rec, batch, w), (None, "batch", "d_ff"),
+                       dtype=jnp.float32, init="zeros"),
+        "conv": ParamSpec((n_rec, batch, cfg.conv1d_width - 1, w),
+                          (None, "batch", None, "d_ff"), dtype=cfg.adt, init="zeros"),
+        "lengths": ParamSpec((batch,), ("batch",), dtype=jnp.int32, init="zeros"),
+    }
+
+
+def _ring_decode_attn(q, kc, vc, pos_c, pos_now, cfg: ModelConfig):
+    """Decode attention over a ring-buffer window cache.
+
+    q (B,H,1,hd); kc/vc (B,1,W,hd); pos_c (B,W) absolute positions (-1 empty).
+    """
+    B, Hq = q.shape[:2]
+    W = kc.shape[2]
+    scale = 1.0 / (cfg.hd ** 0.5)
+    qg = q.reshape(B, 1, Hq, cfg.hd).astype(jnp.float32)
+    s = jnp.einsum("bkhd,bkjd->bhj", qg, kc.astype(jnp.float32)) * scale
+    ok = (pos_c >= 0) & (pos_c <= pos_now[:, None]) & (
+        pos_c > pos_now[:, None] - cfg.local_window
+    )
+    s = jnp.where(ok[:, None, :], s, -1e9)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhj,bkjd->bhd", p, vc.astype(jnp.float32))
+    return o.reshape(B, Hq, 1, cfg.hd).astype(q.dtype)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    B = tokens.shape[0]
+    lengths = cache["lengths"] + 1
+    pos_now = lengths - 1  # (B,)
+    x = L.embed(tokens[:, None], params["embed"], cfg)  # (B,1,d)
+    kinds = _pattern(cfg)
+    new_cache = dict(cache)
+    b_idx = jnp.arange(B)
+    ia = ir = 0
+    W = cache["k"].shape[3]
+    for kind, p in _layers_iter(params, cfg):
+        h = L.apply_norm(x, p["ln1"], cfg)
+        if kind == "local":
+            q, k_new, v_new = L.qkv_project(h, p["attn"], cfg, pos_now[:, None])
+            slot = pos_now % W
+            kc = new_cache["k"][ia].at[b_idx, :, slot].set(
+                k_new[:, :, 0].astype(cache["k"].dtype))
+            vc = new_cache["v"][ia].at[b_idx, :, slot].set(
+                v_new[:, :, 0].astype(cache["v"].dtype))
+            pc = new_cache["kv_pos"][ia].at[b_idx, slot].set(pos_now)
+            new_cache["k"] = new_cache["k"].at[ia].set(kc)
+            new_cache["v"] = new_cache["v"].at[ia].set(vc)
+            new_cache["kv_pos"] = new_cache["kv_pos"].at[ia].set(pc)
+            o = _ring_decode_attn(q, kc, vc, pc, pos_now, cfg)
+            x = x + jnp.einsum("bhsk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))
+            ia += 1
+        else:
+            pr = p["rglru"]
+            adt = x.dtype
+            u = jnp.einsum("bsd,dw->bsw", h, pr["wx"].astype(adt))[:, 0]  # (B,w)
+            y = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, pr["wy"].astype(adt)))[:, 0]
+            conv_st = new_cache["conv"][ir]  # (B,K-1,w)
+            xp = jnp.concatenate([conv_st.astype(adt), u[:, None]], axis=1)  # (B,K,w)
+            K = cfg.conv1d_width
+            cw = pr["conv_w"].astype(adt)
+            u = sum(xp[:, i] * cw[i] for i in range(K)) + pr["conv_b"].astype(adt)
+            new_cache["conv"] = new_cache["conv"].at[ir].set(
+                xp[:, 1:].astype(cache["conv"].dtype))
+            uf = u.astype(jnp.float32)
+            r = jax.nn.sigmoid(uf @ pr["wa"].astype(jnp.float32) + pr["ba"].astype(jnp.float32))
+            i_g = jax.nn.sigmoid(uf @ pr["wi"].astype(jnp.float32) + pr["bi"].astype(jnp.float32))
+            a, mult = _decay(pr["lam"], r)
+            hst = a * new_cache["h"][ir] + mult * (i_g * uf)
+            new_cache["h"] = new_cache["h"].at[ir].set(hst)
+            out = hst.astype(adt) * y
+            x = x + jnp.einsum("bw,wd->bd", out, pr["wo"].astype(adt))[:, None]
+            ir += 1
+        h = L.apply_norm(x, p["ln2"], cfg)
+        x = x + L.mlp_block(h, p["mlp"], cfg)
+    x = L.apply_norm(x, params["ln_f"], cfg)
+    logits = L.unembed(x, params["embed"], cfg)[:, 0]
+    new_cache["lengths"] = lengths
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(tokens, params["embed"], cfg)
+    kinds = _pattern(cfg)
+    new_cache = dict(cache)
+    ia = ir = 0
+    W = cache["k"].shape[3]
+    positions = jnp.arange(S)
+    for kind, p in _layers_iter(params, cfg):
+        h = L.apply_norm(x, p["ln1"], cfg)
+        if kind == "local":
+            q, k, v = L.qkv_project(h, p["attn"], cfg, positions)
+            o = self_attention(q, k, v, _local_spec(cfg), causal=True)
+            x = x + jnp.einsum("bhsk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))
+            # last W positions into the ring buffer at slot pos % W
+            take = min(W, S)
+            last_pos = jnp.arange(S - take, S)
+            slots = last_pos % W
+            kc = new_cache["k"][ia].at[:, :, slots].set(
+                k[:, :, S - take :].astype(cache["k"].dtype))
+            vc = new_cache["v"][ia].at[:, :, slots].set(
+                v[:, :, S - take :].astype(cache["v"].dtype))
+            pc = jnp.full((B, W), -1, jnp.int32).at[:, slots].set(last_pos[None, :])
+            new_cache["k"] = new_cache["k"].at[ia].set(kc)
+            new_cache["v"] = new_cache["v"].at[ia].set(vc)
+            new_cache["kv_pos"] = new_cache["kv_pos"].at[ia].set(pc)
+            ia += 1
+        else:
+            pr = p["rglru"]
+            adt = x.dtype
+            u = jnp.einsum("btd,dw->btw", h, pr["wx"].astype(adt))
+            y = jax.nn.gelu(jnp.einsum("btd,dw->btw", h, pr["wy"].astype(adt)))
+            u_full = _causal_conv(u, pr["conv_w"], pr["conv_b"])
+            uf = u_full.astype(jnp.float32)
+            r = jax.nn.sigmoid(uf @ pr["wa"].astype(jnp.float32) + pr["ba"].astype(jnp.float32))
+            i_g = jax.nn.sigmoid(uf @ pr["wi"].astype(jnp.float32) + pr["bi"].astype(jnp.float32))
+            a, mult = _decay(pr["lam"], r)
+            _, hseq = _rglru_scan(a, mult * (i_g * uf))
+            new_cache["h"] = new_cache["h"].at[ir].set(hseq[:, -1])
+            Kw = cfg.conv1d_width
+            new_cache["conv"] = new_cache["conv"].at[ir].set(
+                u[:, S - (Kw - 1) :].astype(cache["conv"].dtype))
+            out = hseq.astype(adt) * y
+            x = x + jnp.einsum("btw,wd->btd", out, pr["wo"].astype(adt))
+            ir += 1
+        h = L.apply_norm(x, p["ln2"], cfg)
+        x = x + L.mlp_block(h, p["mlp"], cfg)
+    x = L.apply_norm(x, params["ln_f"], cfg)
+    logits = L.unembed(x[:, -1:], params["embed"], cfg)
+    new_cache["lengths"] = jnp.full_like(cache["lengths"], S)
+    return logits[:, 0], new_cache

@@ -1,0 +1,30 @@
+"""Model registry: family name -> module implementing the model API.
+
+Every family module provides:
+  param_specs(cfg)                     -> ParamSpec tree
+  loss_fn(params, cfg, batch)          -> (loss, metrics)      [train_step]
+  forward(params, cfg, batch)          -> (logits, aux)
+  cache_specs(cfg, batch, max_len)     -> ParamSpec tree       [serving]
+  prefill(params, cfg, batch, cache)   -> (logits, cache)
+  decode_step(params, cfg, cache, tok) -> (logits, cache)      [serve_step]
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from . import recurrentgemma, rwkv6, transformer
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "hubert": transformer,
+    "internvl": transformer,
+    "rwkv6": rwkv6,
+    "recurrentgemma": recurrentgemma,
+}
+
+
+def get_model(cfg: ModelConfig):
+    try:
+        return _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r}") from None

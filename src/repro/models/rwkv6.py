@@ -1,0 +1,345 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent decay.
+
+Per-layer recurrence (per head, state S in R^{dh x dh}):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with w_t = exp(-exp(w0 + lora(x~_t))) a *data-dependent* per-channel decay.
+
+Training/prefill uses the chunked-parallel form (GLA-style): intra-chunk
+contributions are C x C matmuls with cumulative-decay weightings; inter-chunk
+state propagation is a ``jax.lax.associative_scan`` over (decay, update)
+pairs — log-depth, no ``while`` loop, so XLA cost analysis sees the true
+FLOPs (DESIGN.md §6). A naive ``lax.scan`` reference path validates the
+chunked math in tests.
+
+MRA is *inapplicable* here (no attention matrix) — DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from .params import ParamSpec
+
+def _decay_clamp(chunk: int) -> float:
+    """Per-step log-decay floor so the factored chunk form stays in fp32 range.
+
+    The chunked intra-block weights are computed as
+    ``(r * exp(Lprev)) @ (k * exp(-Lc))^T`` — exact iff every cumulative
+    exponent |Lc| <= ~85 (fp32 exp range). Clamping each step's log decay at
+    -kappa with kappa = 80/chunk guarantees that while changing semantics
+    only where a channel would forget >e^-kappa of its state in ONE step
+    (contributions below ~1e-35 — invisible in fp32 anyway).
+    """
+    return min(5.0, 80.0 / chunk)
+
+
+# --------------------------------------------------------------------------- #
+# Specs
+# --------------------------------------------------------------------------- #
+def layer_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    lora = cfg.decay_lora
+    f = cfg.d_ff
+    pdt = cfg.pdt
+    tm = {
+        "mu": ParamSpec((5, d), (None, "d_model"), dtype=pdt, init="embed"),
+        "w0": ParamSpec((d,), ("d_model",), dtype=pdt, init="embed"),
+        "wA": ParamSpec((d, lora), ("d_model", None), dtype=pdt, scale=0.01),
+        "wB": ParamSpec((lora, d), (None, "d_model"), dtype=pdt, scale=0.01),
+        "wr": ParamSpec((d, H, dh), ("d_model", "heads", None), dtype=pdt),
+        "wk": ParamSpec((d, H, dh), ("d_model", "heads", None), dtype=pdt),
+        "wv": ParamSpec((d, H, dh), ("d_model", "heads", None), dtype=pdt),
+        "wg": ParamSpec((d, H, dh), ("d_model", "heads", None), dtype=pdt),
+        "u": ParamSpec((H, dh), ("heads", None), dtype=pdt, init="embed"),
+        "wo": ParamSpec((H, dh, d), ("heads", None, "d_model"), dtype=pdt),
+        "gn_w": ParamSpec((H, dh), ("heads", None), dtype=pdt, init="ones"),
+        "gn_b": ParamSpec((H, dh), ("heads", None), dtype=pdt, init="zeros"),
+    }
+    cm = {
+        "mu_k": ParamSpec((d,), ("d_model",), dtype=pdt, init="embed"),
+        "mu_r": ParamSpec((d,), ("d_model",), dtype=pdt, init="embed"),
+        "wk": ParamSpec((d, f), ("d_model", "d_ff"), dtype=pdt),
+        "wv": ParamSpec((f, d), ("d_ff", "d_model"), dtype=pdt),
+        "wr": ParamSpec((d, d), ("d_model", None), dtype=pdt),
+    }
+    return {"ln1": L.norm_specs(cfg), "tm": tm, "ln2": L.norm_specs(cfg), "cm": cm}
+
+
+def param_specs(cfg: ModelConfig):
+    from .params import stack_specs
+
+    if cfg.scan_layers:
+        layers = stack_specs(layer_specs(cfg), cfg.num_layers)
+    else:
+        layers = [layer_specs(cfg) for _ in range(cfg.num_layers)]
+    return {
+        "embed": L.embed_specs(cfg),
+        "ln_f": L.norm_specs(cfg),
+        "layers": layers,
+    }
+
+
+def _layers_iter(params, cfg: ModelConfig):
+    from .params import layer_slice
+
+    if cfg.scan_layers:
+        return [layer_slice(params["layers"], i) for i in range(cfg.num_layers)]
+    return params["layers"]
+
+
+# --------------------------------------------------------------------------- #
+# Time mixing
+# --------------------------------------------------------------------------- #
+def _shift(x):
+    """Previous-token values, zero at t=0. x (B,T,d)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _tm_inputs(x, p, cfg):
+    """Compute r,k,v,g (B,H,T,dh) and log-decay lw (B,H,T,dh)."""
+    adt = x.dtype
+    xs = _shift(x)
+    mu = p["mu"].astype(adt)  # (5, d)
+    xr, xk, xv, xw, xg = (x + (xs - x) * mu[i] for i in range(5))
+    r = jnp.einsum("btd,dhk->bhtk", xr, p["wr"].astype(adt))
+    k = jnp.einsum("btd,dhk->bhtk", xk, p["wk"].astype(adt))
+    v = jnp.einsum("btd,dhk->bhtk", xv, p["wv"].astype(adt))
+    g = jax.nn.silu(jnp.einsum("btd,dhk->bhtk", xg, p["wg"].astype(adt)))
+    dw = jnp.einsum(
+        "btl,ld->btd", jnp.tanh(jnp.einsum("btd,dl->btl", xw, p["wA"].astype(adt))),
+        p["wB"].astype(adt),
+    )
+    H, dh = p["u"].shape
+    wlog = -jnp.exp(
+        (p["w0"].astype(jnp.float32) + dw.astype(jnp.float32))
+        .reshape(x.shape[0], x.shape[1], H, dh)
+        .transpose(0, 2, 1, 3)
+    )  # (B,H,T,dh), strictly negative
+    wlog = jnp.maximum(wlog, -_decay_clamp(cfg.rwkv_chunk))
+    return (r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            g, wlog)
+
+
+def wkv_chunked(r, k, v, lw, u, chunk: int):
+    """Chunked-parallel WKV. r/k/v/lw (B,H,T,dh); u (H,dh) -> y (B,H,T,dh)."""
+    B, H, T, dh = r.shape
+    C = chunk
+    assert T % C == 0, (T, C)
+    nC = T // C
+    rc, kc, vc, lwc = (a.reshape(B, H, nC, C, dh) for a in (r, k, v, lw))
+
+    Lc = jnp.cumsum(lwc, axis=3)  # (B,H,nC,C,dh) cumulative log decay incl. step t
+    Ltot = Lc[:, :, :, -1]  # (B,H,nC,dh)
+    Lprev = Lc - lwc  # cumulative decay *before* step t
+
+    # inter-chunk state: S_c = diag(exp(Ltot_c)) S_{c-1} + M_c
+    kd = kc * jnp.exp(Ltot[:, :, :, None, :] - Lc)
+    M = jnp.einsum("bhcti,bhctj->bhcij", kd, vc)  # (B,H,nC,dh,dh)
+    D = jnp.exp(Ltot)
+
+    def combine(a, b):
+        Da, Ma = a
+        Db, Mb = b
+        return Da * Db, Db[..., :, None] * Ma + Mb
+
+    Ds, Ms = jax.lax.associative_scan(combine, (D, M), axis=2)
+    # state *before* each chunk
+    S_prev = jnp.concatenate(
+        [jnp.zeros_like(Ms[:, :, :1]), Ms[:, :, :-1]], axis=2
+    )
+
+    # intra-chunk: A[t,s] = r_t . exp(Lprev_t - Lc_s) k_s  (s < t), diag u bonus
+    # exponents bounded by the per-step decay clamp (see _decay_clamp)
+    rq = rc * jnp.exp(Lprev)
+    ki = kc * jnp.exp(-Lc)
+    A = jnp.einsum("bhcti,bhcsi->bhcts", rq, ki)
+    tri = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    A = jnp.where(tri[None, None, None], A, 0.0)
+    diag = jnp.einsum("bhcti,hi,bhcti->bhct", rc, u.astype(jnp.float32), kc)
+    y = jnp.einsum("bhcts,bhcsj->bhctj", A, vc) + diag[..., None] * vc
+    y = y + jnp.einsum("bhcti,bhcij->bhctj", rq, S_prev)
+    return y.reshape(B, H, T, dh)
+
+
+def wkv_scan(r, k, v, lw, u):
+    """Naive sequential reference (lax.scan over time)."""
+    B, H, T, dh = r.shape
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B,H,dh)
+        a = kt[..., :, None] * vt[..., None, :]  # (B,H,dh,dh)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u.astype(jnp.float32)[None, :, :, None] * a)
+        S = jnp.exp(wt)[..., :, None] * S + a
+        return S, y
+
+    S0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    xs = tuple(a.transpose(2, 0, 1, 3) for a in (r, k, v, lw))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 2, 0, 3)
+
+
+def _group_norm(y, w, b, eps):
+    """Per-head normalization. y (B,H,T,dh)."""
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + eps)
+    return yn * w.astype(jnp.float32)[None, :, None, :] + b.astype(jnp.float32)[None, :, None, :]
+
+
+def time_mix(x, p, cfg: ModelConfig, *, use_scan: bool = False):
+    r, k, v, g, lw = _tm_inputs(x, p, cfg)
+    if use_scan:
+        y = wkv_scan(r, k, v, lw, p["u"])
+    else:
+        y = wkv_chunked(r, k, v, lw, p["u"], cfg.rwkv_chunk)
+    y = _group_norm(y, p["gn_w"], p["gn_b"], cfg.norm_eps) * g.astype(jnp.float32)
+    return jnp.einsum("bhtk,hkd->btd", y.astype(x.dtype), p["wo"].astype(x.dtype))
+
+
+def channel_mix(x, p, cfg: ModelConfig):
+    adt = x.dtype
+    xs = _shift(x)
+    xk = x + (xs - x) * p["mu_k"].astype(adt)
+    xr = x + (xs - x) * p["mu_r"].astype(adt)
+    k = jnp.einsum("btd,df->btf", xk, p["wk"].astype(adt))
+    k = jnp.square(jax.nn.relu(k))
+    out = jnp.einsum("btf,fd->btd", k, p["wv"].astype(adt))
+    return jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"].astype(adt))) * out
+
+
+# --------------------------------------------------------------------------- #
+# Model
+# --------------------------------------------------------------------------- #
+def forward(params, cfg: ModelConfig, batch, *, use_scan: bool = False, key_mask=None):
+    x = L.embed(batch["tokens"], params["embed"], cfg)
+
+    def body(x, p):
+        x = x + time_mix(L.apply_norm(x, p["ln1"], cfg), p["tm"], cfg, use_scan=use_scan)
+        x = x + channel_mix(L.apply_norm(x, p["ln2"], cfg), p["cm"], cfg)
+        return x, {}
+
+    body = L.remat_wrap(body, cfg)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda c, lp: body(c, lp), x, params["layers"])
+    else:
+        for p in params["layers"]:
+            x, _ = body(x, p)
+    x = L.apply_norm(x, params["ln_f"], cfg)
+    return L.unembed(x, params["embed"], cfg), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, key_mask=None):
+    logits, aux = forward(params, cfg, batch)
+    loss = jnp.mean(L.lm_nll(logits, batch["targets"], cfg))
+    return loss, {"loss": loss, "nll": loss}
+
+
+# --------------------------------------------------------------------------- #
+# Serving: recurrent state instead of a KV cache
+# --------------------------------------------------------------------------- #
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    Lx = cfg.num_layers
+    return {
+        "state": ParamSpec((Lx, batch, H, dh, dh),
+                           (None, "batch", "heads", None, None),
+                           dtype=jnp.float32, init="zeros"),
+        "tm_x": ParamSpec((Lx, batch, d), (None, "batch", "d_model"),
+                          dtype=cfg.adt, init="zeros"),
+        "cm_x": ParamSpec((Lx, batch, d), (None, "batch", "d_model"),
+                          dtype=cfg.adt, init="zeros"),
+        "lengths": ParamSpec((batch,), ("batch",), dtype=jnp.int32, init="zeros"),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    """One recurrent step. tokens (B,) -> (logits, cache)."""
+    B = tokens.shape[0]
+    x = L.embed(tokens[:, None], params["embed"], cfg)[:, 0]  # (B, d)
+    new_cache = dict(cache)
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    for i, p in enumerate(_layers_iter(params, cfg)):
+        # --- time mix (single step) ---
+        h = L.apply_norm(x[:, None], p["ln1"], cfg)[:, 0]
+        xs = cache["tm_x"][i].astype(h.dtype)
+        mu = p["tm"]["mu"].astype(h.dtype)
+        xr, xk, xv, xw, xg = (h + (xs - h) * mu[j] for j in range(5))
+        r = jnp.einsum("bd,dhk->bhk", xr, p["tm"]["wr"].astype(h.dtype)).astype(jnp.float32)
+        k = jnp.einsum("bd,dhk->bhk", xk, p["tm"]["wk"].astype(h.dtype)).astype(jnp.float32)
+        v = jnp.einsum("bd,dhk->bhk", xv, p["tm"]["wv"].astype(h.dtype)).astype(jnp.float32)
+        g = jax.nn.silu(jnp.einsum("bd,dhk->bhk", xg, p["tm"]["wg"].astype(h.dtype)))
+        dw = jnp.einsum(
+            "bl,ld->bd", jnp.tanh(jnp.einsum("bd,dl->bl", xw, p["tm"]["wA"].astype(h.dtype))),
+            p["tm"]["wB"].astype(h.dtype),
+        )
+        w = jnp.exp(-jnp.exp(
+            (p["tm"]["w0"].astype(jnp.float32) + dw.astype(jnp.float32)).reshape(B, H, dh)
+        ))
+        S = cache["state"][i]  # (B,H,dh,dh)
+        a = k[..., :, None] * v[..., None, :]
+        u = p["tm"]["u"].astype(jnp.float32)
+        y = jnp.einsum("bhi,bhij->bhj", r, S + u[None, :, :, None] * a)
+        S = w[..., :, None] * S + a
+        new_cache["state"] = new_cache["state"].at[i].set(S)
+        new_cache["tm_x"] = new_cache["tm_x"].at[i].set(h.astype(cache["tm_x"].dtype))
+        y = _group_norm(y[:, :, None], p["tm"]["gn_w"], p["tm"]["gn_b"], cfg.norm_eps)[:, :, 0]
+        y = y * g.astype(jnp.float32)
+        x = x + jnp.einsum("bhk,hkd->bd", y.astype(x.dtype), p["tm"]["wo"].astype(x.dtype))
+        # --- channel mix (single step) ---
+        h = L.apply_norm(x[:, None], p["ln2"], cfg)[:, 0]
+        xs = cache["cm_x"][i].astype(h.dtype)
+        xk2 = h + (xs - h) * p["cm"]["mu_k"].astype(h.dtype)
+        xr2 = h + (xs - h) * p["cm"]["mu_r"].astype(h.dtype)
+        kk = jnp.square(jax.nn.relu(jnp.einsum("bd,df->bf", xk2, p["cm"]["wk"].astype(h.dtype))))
+        out = jnp.einsum("bf,fd->bd", kk, p["cm"]["wv"].astype(h.dtype))
+        x = x + jax.nn.sigmoid(
+            jnp.einsum("bd,de->be", xr2, p["cm"]["wr"].astype(h.dtype))
+        ) * out
+        new_cache["cm_x"] = new_cache["cm_x"].at[i].set(h.astype(cache["cm_x"].dtype))
+    x = L.apply_norm(x[:, None], params["ln_f"], cfg)
+    logits = L.unembed(x, params["embed"], cfg)[:, 0]
+    new_cache["lengths"] = cache["lengths"] + 1
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    """Prefill: run chunked forward and emit the final recurrent state."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(tokens, params["embed"], cfg)
+    new_cache = dict(cache)
+    for i, p in enumerate(_layers_iter(params, cfg)):
+        h = L.apply_norm(x, p["ln1"], cfg)
+        r, k, v, g, lw = _tm_inputs(h, p["tm"], cfg)
+        y = wkv_chunked(r, k, v, lw, p["tm"]["u"], cfg.rwkv_chunk)
+        # final state for decoding: S = sum_s diag(exp(L_total - L_s)) k_s^T v_s
+        Lc = jnp.cumsum(lw, axis=2)
+        Ltot = Lc[:, :, -1:]
+        kd = k * jnp.exp(jnp.clip(Ltot - Lc, -85.0, 0.0))
+        state = jnp.einsum("bhti,bhtj->bhij", kd, v)
+        new_cache["state"] = new_cache["state"].at[i].set(state)
+        new_cache["tm_x"] = new_cache["tm_x"].at[i].set(h[:, -1].astype(cache["tm_x"].dtype))
+        y = _group_norm(y, p["tm"]["gn_w"], p["tm"]["gn_b"], cfg.norm_eps)
+        y = y * g.astype(jnp.float32)
+        x = x + jnp.einsum("bhtk,hkd->btd", y.astype(x.dtype), p["tm"]["wo"].astype(x.dtype))
+        h = L.apply_norm(x, p["ln2"], cfg)
+        x = x + channel_mix(h, p["cm"], cfg)
+        new_cache["cm_x"] = new_cache["cm_x"].at[i].set(h[:, -1].astype(cache["cm_x"].dtype))
+    x = L.apply_norm(x, params["ln_f"], cfg)
+    logits = L.unembed(x[:, -1:], params["embed"], cfg)
+    new_cache["lengths"] = jnp.full_like(cache["lengths"], S)
+    return logits[:, 0], new_cache

@@ -1,0 +1,323 @@
+"""Transformer model family: dense GQA LMs, MoE LMs, HuBERT encoder, VLM.
+
+One stack implementation covers the assigned architectures:
+  * dense:      qwen2-7b, llama3.2-3b, qwen3-1.7b, yi-6b (causal GQA LMs)
+  * moe:        kimi-k2-1t-a32b, granite-moe-3b-a800m (MoE FFN)
+  * hubert:     hubert-xlarge (bidirectional encoder; audio-frame frontend stub)
+  * internvl:   internvl2-1b (vision-patch frontend stub + causal LM backbone)
+
+The paper's technique plugs in through ``cfg.attention`` (AttentionSpec):
+kind="mra2"/"mra2_s" routes every attention layer through MRA.
+
+Batch formats (built by repro.data / launch.input_specs):
+  dense/moe:  {"tokens": (B,S) i32, "targets": (B,S) i32}
+  hubert:     {"frames": (B,S,Fd) f32, "mask_positions": (B,S) bool,
+               "targets": (B,S) i32}
+  internvl:   {"tokens": (B,S_text) i32, "patches": (B,P,Fd) f32,
+               "targets": (B,S_text) i32}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.attention import decode_attention, self_attention
+from repro.core.mra_decode import PyramidState
+from . import layers as L
+from .moe import moe_block, moe_specs
+from .params import ParamSpec
+
+
+# --------------------------------------------------------------------------- #
+# Specs
+# --------------------------------------------------------------------------- #
+def layer_specs(cfg: ModelConfig):
+    p = {
+        "ln1": L.norm_specs(cfg),
+        "attn": L.attn_specs(cfg),
+        "ln2": L.norm_specs(cfg),
+    }
+    if cfg.family == "moe" and cfg.moe is not None:
+        p["moe"] = moe_specs(cfg)
+    else:
+        p["mlp"] = L.mlp_specs(cfg)
+    return p
+
+
+def param_specs(cfg: ModelConfig):
+    from .params import stack_specs
+
+    if cfg.scan_layers:
+        layers = stack_specs(layer_specs(cfg), cfg.num_layers)
+    else:
+        layers = [layer_specs(cfg) for _ in range(cfg.num_layers)]
+    p = {
+        "embed": L.embed_specs(cfg),
+        "ln_f": L.norm_specs(cfg),
+        "layers": layers,
+    }
+    if cfg.frontend == "audio_frames":
+        p["frontend"] = {
+            "proj": ParamSpec((cfg.frontend_dim, cfg.d_model), (None, "d_model"),
+                              dtype=cfg.pdt),
+            "mask_embed": ParamSpec((cfg.d_model,), ("d_model",), dtype=cfg.pdt,
+                                    init="embed"),
+        }
+    if cfg.frontend == "vision_patches":
+        p["frontend"] = {
+            "proj": ParamSpec((cfg.frontend_dim, cfg.d_model), (None, "d_model"),
+                              dtype=cfg.pdt),
+        }
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# Forward (full sequence: training / prefill)
+# --------------------------------------------------------------------------- #
+def _input_embed(params, cfg: ModelConfig, batch):
+    """Returns x (B, S, d) activations and target positions info."""
+    if cfg.family == "hubert":
+        x = jnp.einsum(
+            "bsf,fd->bsd", batch["frames"].astype(cfg.adt),
+            params["frontend"]["proj"].astype(cfg.adt),
+        )
+        mask_emb = params["frontend"]["mask_embed"].astype(cfg.adt)
+        mp = batch["mask_positions"][..., None]
+        x = jnp.where(mp, mask_emb[None, None, :], x)
+        if cfg.pos == "learned":
+            x = x + jnp.take(params["embed"]["pos"], jnp.arange(x.shape[1]),
+                             axis=0).astype(cfg.adt)
+        return x
+    if cfg.family == "internvl":
+        patches = jnp.einsum(
+            "bpf,fd->bpd", batch["patches"].astype(cfg.adt),
+            params["frontend"]["proj"].astype(cfg.adt),
+        )
+        text = L.embed(batch["tokens"], params["embed"], cfg)
+        return jnp.concatenate([patches, text], axis=1)
+    return L.embed(batch["tokens"], params["embed"], cfg)
+
+
+def _layer_fwd(x, p, cfg: ModelConfig, key_mask):
+    aux = {}
+    h = L.apply_norm(x, p["ln1"], cfg)
+    x = x + L.attn_block(h, p["attn"], cfg, key_mask=key_mask)
+    h = L.apply_norm(x, p["ln2"], cfg)
+    if "moe" in p:
+        mo, aux = moe_block(h, p["moe"], cfg)
+        x = x + mo
+    else:
+        x = x + L.mlp_block(h, p["mlp"], cfg)
+    return x, aux
+
+
+def forward(params, cfg: ModelConfig, batch, *, key_mask=None):
+    """Full-sequence forward; returns (logits, aux_losses)."""
+    x = _input_embed(params, cfg, batch)
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers:
+        def body(carry, lp):
+            x, aux_tot = carry
+            x, aux = _layer_fwd(x, lp, cfg, key_mask)
+            for v in aux.values():
+                aux_tot = aux_tot + v
+            return (x, aux_tot), None
+
+        body = L.remat_wrap(body, cfg)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["layers"])
+    else:
+        body = L.remat_wrap(
+            functools.partial(_layer_fwd, cfg=cfg, key_mask=key_mask), cfg
+        )
+        for p in params["layers"]:
+            x, aux = body(x, p)
+            for v in aux.values():
+                aux_total = aux_total + v
+    x = L.apply_norm(x, params["ln_f"], cfg)
+    logits = L.unembed(x, params["embed"], cfg)
+    return logits, aux_total
+
+
+def _layers_iter(params, cfg: ModelConfig):
+    """Iterate per-layer param trees regardless of stacking."""
+    from .params import layer_slice
+
+    if cfg.scan_layers:
+        return [layer_slice(params["layers"], i) for i in range(cfg.num_layers)]
+    return params["layers"]
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, key_mask=None):
+    logits, aux = forward(params, cfg, batch, key_mask=key_mask)
+    targets = batch["targets"]
+    if cfg.family == "internvl":
+        logits = logits[:, cfg.num_patches :]
+    nll = L.lm_nll(logits, targets, cfg)
+    if cfg.family == "hubert":
+        w = batch["mask_positions"].astype(jnp.float32)  # predict only masked
+        loss = jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+    else:
+        loss = jnp.mean(nll)
+    metrics = {"loss": loss, "aux_loss": aux, "nll": loss}
+    return loss + aux, metrics
+
+
+# --------------------------------------------------------------------------- #
+# Serving: KV cache, prefill, decode
+# --------------------------------------------------------------------------- #
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """KV cache as ParamSpecs (so the dry-run can make abstract caches).
+
+    Per-layer entries (lists), not one stacked (L, ...) array: scatters into
+    a stacked cache fuse into whole-cache updates (and XLA-CPU lowers bf16
+    scatter via a full fp32 round-trip — §Perf iteration Y2); per-layer
+    tensors bound the update working set to one layer.
+    """
+    hd, Hkv, Lx = cfg.hd, cfg.kv_heads, cfg.num_layers
+    dt = cfg.adt
+    quant = cfg.attention.kv_quant and cfg.attention.kind in ("mra2", "mra2_s")
+    kv_dt = jnp.int8 if quant else dt
+    kv_spec = ParamSpec((batch, Hkv, max_len, hd),
+                        ("batch", "kv_heads", "kv_seq", None), dtype=kv_dt,
+                        init="zeros")
+    c = {
+        "k": [kv_spec for _ in range(Lx)],
+        "v": [kv_spec for _ in range(Lx)],
+        "lengths": ParamSpec((batch,), ("batch",), dtype=jnp.int32, init="zeros"),
+    }
+    if quant:
+        sc_spec = ParamSpec((batch, Hkv, max_len),
+                            ("batch", "kv_heads", "kv_seq"), dtype=jnp.float32,
+                            init="zeros")
+        c["k_scale"] = [sc_spec for _ in range(Lx)]
+        c["v_scale"] = [sc_spec for _ in range(Lx)]
+    if cfg.attention.kind in ("mra2", "mra2_s"):
+        nb = max_len // cfg.attention.block_size
+        pyr_spec = ParamSpec((batch, Hkv, nb, hd),
+                             ("batch", "kv_heads", None, None),
+                             dtype=jnp.float32, init="zeros")
+        c["pyr_k"] = [pyr_spec for _ in range(Lx)]
+        c["pyr_v"] = [pyr_spec for _ in range(Lx)]
+    return c
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    """Run the full prompt, fill the cache, return (last_logits, cache)."""
+    x = _input_embed(params, cfg, batch)
+    B, S, d = x.shape
+    positions = jnp.arange(S)
+    new_cache = dict(cache)
+    for i, p in enumerate(_layers_iter(params, cfg)):
+        h = L.apply_norm(x, p["ln1"], cfg)
+        q, k, v = L.qkv_project(h, p["attn"], cfg, positions)
+        ke, ve = L.expand_kv_slots(k, v, cfg)
+        q, ke, ve = L._tp_attn_constraint(cfg, q, ke, ve)
+        o = self_attention(q, ke, ve, cfg.attention, causal=cfg.causal)
+        if cfg.padded_heads != cfg.num_heads:
+            o = o * L.head_mask(cfg)[None, :, None, None].astype(o.dtype)
+        x = x + jnp.einsum("bhsk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))
+        h = L.apply_norm(x, p["ln2"], cfg)
+        if "moe" in p:
+            mo, _ = moe_block(h, p["moe"], cfg)
+            x = x + mo
+        else:
+            x = x + L.mlp_block(h, p["mlp"], cfg)
+        new_cache["k"] = list(new_cache["k"])
+        new_cache["v"] = list(new_cache["v"])
+        if "k_scale" in new_cache:  # int8 KV cache (§Perf Y3)
+            from repro.core.mra_decode import quantize_kv
+
+            kq, ksc = quantize_kv(k)
+            vq, vsc = quantize_kv(v)
+            new_cache["k_scale"] = list(new_cache["k_scale"])
+            new_cache["v_scale"] = list(new_cache["v_scale"])
+            new_cache["k_scale"][i] = new_cache["k_scale"][i].at[:, :, :S].set(ksc)
+            new_cache["v_scale"][i] = new_cache["v_scale"][i].at[:, :, :S].set(vsc)
+            new_cache["k"][i] = new_cache["k"][i].at[:, :, :S].set(kq)
+            new_cache["v"][i] = new_cache["v"][i].at[:, :, :S].set(vq)
+        else:
+            new_cache["k"][i] = new_cache["k"][i].at[:, :, :S].set(
+                k.astype(new_cache["k"][i].dtype))
+            new_cache["v"][i] = new_cache["v"][i].at[:, :, :S].set(
+                v.astype(new_cache["v"][i].dtype))
+        if "pyr_k" in new_cache:
+            bs = cfg.attention.block_size
+            kb = k.reshape(B, cfg.kv_heads, S // bs, bs, cfg.hd).sum(3, dtype=jnp.float32)
+            vb = v.reshape(B, cfg.kv_heads, S // bs, bs, cfg.hd).sum(3, dtype=jnp.float32)
+            new_cache["pyr_k"] = list(new_cache["pyr_k"])
+            new_cache["pyr_v"] = list(new_cache["pyr_v"])
+            new_cache["pyr_k"][i] = new_cache["pyr_k"][i].at[:, :, : S // bs].set(kb)
+            new_cache["pyr_v"][i] = new_cache["pyr_v"][i].at[:, :, : S // bs].set(vb)
+    new_cache["lengths"] = jnp.full_like(cache["lengths"], S)
+    x = L.apply_norm(x, params["ln_f"], cfg)
+    logits = L.unembed(x[:, -1:], params["embed"], cfg)
+    return logits[:, 0], new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    """One decode step. tokens (B,) int32 -> (logits (B,V), cache)."""
+    B = tokens.shape[0]
+    lengths = cache["lengths"] + 1  # includes the new token
+    x = L.embed(tokens[:, None], params["embed"], cfg)
+    new_cache = dict(cache)
+    b_idx = jnp.arange(B)
+    for i, p in enumerate(_layers_iter(params, cfg)):
+        h = L.apply_norm(x, p["ln1"], cfg)
+        positions = (lengths - 1)[:, None]
+        q, k_new, v_new = L.qkv_project(h, p["attn"], cfg, positions)
+        ks = vs = None
+        if "k_scale" in new_cache:  # int8 KV cache (§Perf Y3)
+            from repro.core.mra_decode import quantize_kv
+
+            kq, ksc = quantize_kv(k_new[:, :, 0])
+            vq, vsc = quantize_kv(v_new[:, :, 0])
+            new_cache["k_scale"] = list(new_cache["k_scale"])
+            new_cache["v_scale"] = list(new_cache["v_scale"])
+            ks = new_cache["k_scale"][i].at[b_idx, :, lengths - 1].set(ksc)
+            vs = new_cache["v_scale"][i].at[b_idx, :, lengths - 1].set(vsc)
+            new_cache["k_scale"][i] = ks
+            new_cache["v_scale"][i] = vs
+            k_write, v_write = kq, vq
+        else:
+            k_write = k_new[:, :, 0].astype(new_cache["k"][i].dtype)
+            v_write = v_new[:, :, 0].astype(new_cache["v"][i].dtype)
+        kc = new_cache["k"][i].at[b_idx, :, lengths - 1].set(k_write)
+        vc = new_cache["v"][i].at[b_idx, :, lengths - 1].set(v_write)
+        new_cache["k"] = list(new_cache["k"])
+        new_cache["v"] = list(new_cache["v"])
+        new_cache["k"][i] = kc
+        new_cache["v"][i] = vc
+        pyramid = None
+        if "pyr_k" in new_cache:
+            bs = cfg.attention.block_size
+            blk = (lengths - 1) // bs
+            pk = new_cache["pyr_k"][i].at[b_idx, :, blk].add(
+                k_new[:, :, 0].astype(jnp.float32)
+            )
+            pv = new_cache["pyr_v"][i].at[b_idx, :, blk].add(
+                v_new[:, :, 0].astype(jnp.float32)
+            )
+            new_cache["pyr_k"] = list(new_cache["pyr_k"])
+            new_cache["pyr_v"] = list(new_cache["pyr_v"])
+            new_cache["pyr_k"][i] = pk
+            new_cache["pyr_v"][i] = pv
+            pyramid = PyramidState(pk, pv)
+        o = decode_attention(q, kc, vc, lengths, cfg.attention, pyramid=pyramid,
+                             k_scale=ks, v_scale=vs)
+        if cfg.padded_heads != cfg.num_heads:
+            o = o * L.head_mask(cfg)[None, :, None, None].astype(o.dtype)
+        x = x + jnp.einsum("bhsk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))
+        h = L.apply_norm(x, p["ln2"], cfg)
+        if "moe" in p:
+            mo, _ = moe_block(h, p["moe"], cfg)
+            x = x + mo
+        else:
+            x = x + L.mlp_block(h, p["mlp"], cfg)
+    x = L.apply_norm(x, params["ln_f"], cfg)
+    logits = L.unembed(x, params["embed"], cfg)[:, 0]
+    new_cache["lengths"] = lengths
+    return logits, new_cache

@@ -1,0 +1,2 @@
+from .adamw import AdamW, AdamWState, cosine_schedule, zero_pspec
+from .compression import EFState, compress, decompress, init_ef

@@ -1,0 +1,40 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Microbatch gradients are accumulated in bf16 (half the accumulation memory
+and, on the explicit-collective path, half the all-reduce bytes); the
+quantization error is carried in a small fp32 residual ("error feedback",
+Seide et al. 2014 / Karimireddy et al. 2019) so the *long-run* gradient sum
+is unbiased. Enabled by ``TrainConfig.grad_compression="bf16_ef"``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: object  # fp32 pytree
+
+
+def init_ef(params) -> EFState:
+    return EFState(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress(grads, ef: EFState):
+    """Return (bf16 grads to accumulate/reduce, new residual)."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        gq = gf.astype(jnp.bfloat16)
+        return gq, gf - gq.astype(jnp.float32)
+
+    out = jax.tree.map(one, grads, ef.residual)
+    gq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return gq, EFState(res)
+
+
+def decompress(grads_bf16):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads_bf16)

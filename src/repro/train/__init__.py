@@ -1,0 +1,1 @@
+from .loop import TrainConfig, make_train_step, train

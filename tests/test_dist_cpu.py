@@ -1,0 +1,159 @@
+"""Distributed-semantics tests on 8 fake CPU devices (subprocess-isolated).
+
+The device-count flag must be set before jax initializes, so these tests run
+in fresh subprocesses. They verify: (a) pjit'd train_step on a (2,4) mesh
+produces the same loss as single-device, (b) MoE expert-parallel shard_map
+matches the local path, (c) the full dry-run machinery works end-to-end on a
+small mesh.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_ENV = {**os.environ, "PYTHONPATH": "src",
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+
+
+def _run(code: str):
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=_ENV,
+                       cwd=os.path.dirname(os.path.dirname(__file__)), timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_pjit_train_step_matches_single_device():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_smoke_config
+        from repro.configs.base import ShapeCfg
+        from repro.data import make_batch
+        from repro.distributed import mesh_utils
+        from repro.launch.mesh import make_local_mesh
+        from repro.models import get_model, init_params, param_shardings
+        from repro.optim import AdamW, cosine_schedule
+        from repro.train import TrainConfig, make_train_step
+
+        cfg = get_smoke_config("qwen3-1.7b")
+        model = get_model(cfg)
+        shape = ShapeCfg("s", 64, 8, "train")
+        batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, shape).items()}
+        params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+        opt = AdamW()
+        step = make_train_step(cfg, TrainConfig(), opt, cosine_schedule(1e-3, 1, 10))
+
+        _, _, m_local = jax.jit(step)(params, opt.init(params), batch)
+
+        mesh = make_local_mesh(2, 4)
+        shardings = param_shardings(model.param_specs(cfg), mesh)
+        p_sh = jax.tree.map(jax.device_put, params, shardings)
+        with mesh_utils.use_mesh(mesh):
+            _, _, m_mesh = jax.jit(step)(p_sh, opt.init(p_sh), batch)
+        d = abs(float(m_local["loss"]) - float(m_mesh["loss"]))
+        assert d < 5e-3, (float(m_local["loss"]), float(m_mesh["loss"]))
+        print("OK", d)
+    """)
+    assert "OK" in out
+
+
+def test_moe_expert_parallel_matches_local():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_smoke_config
+        from repro.distributed import mesh_utils
+        from repro.launch.mesh import make_local_mesh
+        from repro.models.moe import moe_block, moe_specs
+        from repro.models.params import init_params, param_shardings
+
+        cfg = get_smoke_config("kimi-k2-1t-a32b")  # 8 experts; model axis 4
+        specs = moe_specs(cfg)
+        p = init_params(specs, jax.random.PRNGKey(0))
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (2, 16, cfg.d_model)), jnp.float32)
+        out_local, aux_local = moe_block(x, p, cfg)
+
+        mesh = make_local_mesh(2, 4)
+        with mesh_utils.use_mesh(mesh):
+            out_mesh, aux_mesh = jax.jit(lambda x, p: moe_block(x, p, cfg))(x, p)
+        err = float(jnp.abs(out_local - out_mesh).max())
+        assert err < 1e-3, err
+        print("OK", err)
+    """)
+    assert "OK" in out
+
+
+def test_mra_attention_matches_under_pjit():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.mra import MraConfig, mra2_attention
+        from repro.launch.mesh import make_local_mesh
+
+        r = np.random.default_rng(0)
+        q = jnp.asarray(r.standard_normal((4, 4, 128, 16)), jnp.float32)
+        k = jnp.asarray(r.standard_normal((4, 2, 128, 16)), jnp.float32)
+        v = jnp.asarray(r.standard_normal((4, 2, 128, 16)), jnp.float32)
+        cfg = MraConfig(block_size=16, blocks_per_row=3, causal=True)
+        ref = mra2_attention(q, k, v, cfg)
+        mesh = make_local_mesh(4, 2)
+        sh_q = NamedSharding(mesh, P("data", "model", None, None))
+        sh_kv = NamedSharding(mesh, P("data", "model", None, None))
+        with mesh:
+            out = jax.jit(lambda q, k, v: mra2_attention(q, k, v, cfg),
+                          in_shardings=(sh_q, sh_kv, sh_kv))(q, k, v)
+        err = float(jnp.abs(out - ref).max())
+        assert err < 1e-4, err
+        print("OK", err)
+    """)
+    assert "OK" in out
+
+
+def test_dryrun_machinery_small_mesh():
+    out = _run("""
+        import jax
+        from repro.configs import get_smoke_config
+        from repro.configs.base import ShapeCfg
+        from repro.distributed import mesh_utils
+        from repro.launch.mesh import make_local_mesh
+        from repro.launch.specs import batch_specs, params_abstract
+        from repro.optim import AdamW, cosine_schedule
+        from repro.train import TrainConfig, make_train_step
+
+        cfg = get_smoke_config("granite-moe-3b-a800m").replace(scan_layers=True)
+        mesh = make_local_mesh(2, 4)
+        shape = ShapeCfg("s", 64, 8, "train")
+        with mesh_utils.use_mesh(mesh):
+            params = params_abstract(cfg, mesh)
+            opt = AdamW()
+            step = make_train_step(cfg, TrainConfig(), opt, cosine_schedule(1e-3, 1, 10))
+            c = jax.jit(step, donate_argnums=(0, 1)).lower(
+                params, opt.abstract_state(params, mesh), batch_specs(cfg, shape, mesh)
+            ).compile()
+            mem = c.memory_analysis()
+            assert mem.temp_size_in_bytes > 0
+            print("OK", c.cost_analysis().get("flops", 0) > 0)
+    """)
+    assert "OK" in out
+
+
+def test_elastic_restore_reshards(tmp_path):
+    out = _run(f"""
+        import jax, jax.numpy as jnp
+        from repro.checkpoint import restore, save
+        from repro.launch.mesh import make_local_mesh
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
+        save({str(tmp_path)!r}, 1, tree)
+        # restore onto a different mesh/sharding than it was saved with
+        mesh = make_local_mesh(2, 4)
+        sh = {{"w": NamedSharding(mesh, P("data", "model"))}}
+        back = restore({str(tmp_path)!r}, 1, tree, shardings=sh)
+        assert back["w"].sharding == sh["w"]
+        assert float(back["w"].sum()) == float(tree["w"].sum())
+        print("OK")
+    """)
+    assert "OK" in out

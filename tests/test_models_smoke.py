@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests: reduced config, one train step, decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.configs.base import SHAPES, ShapeCfg
+from repro.data import make_batch
+from repro.models import count_params, get_model, init_params
+
+SMOKE_SHAPE = ShapeCfg("smoke", 64, 2, "train")
+
+
+def _params_and_batch(arch, **overrides):
+    cfg = get_smoke_config(arch, **overrides)
+    model = get_model(cfg)
+    params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, SMOKE_SHAPE).items()}
+    return cfg, model, params, batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_grad(arch):
+    cfg, model, params, batch = _params_and_batch(arch)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: model.loss_fn(p, cfg, batch), has_aux=True
+    )(params)
+    assert bool(jnp.isfinite(loss)), arch
+    assert 0 < float(loss) < 20
+    for g in jax.tree.leaves(grads):
+        assert bool(jnp.isfinite(g.astype(jnp.float32)).all()), arch
+    logits, _ = model.forward(params, cfg, batch)
+    assert logits.shape[-1] == cfg.padded_vocab
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "kimi-k2-1t-a32b", "rwkv6-7b",
+                                  "recurrentgemma-9b"])
+def test_scan_layers_matches_unrolled_loss(arch):
+    cfg_u = get_smoke_config(arch)
+    model = get_model(cfg_u)
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg_u, SMOKE_SHAPE).items()}
+    cfg_s = cfg_u.replace(scan_layers=True)
+    pu = init_params(model.param_specs(cfg_u), jax.random.PRNGKey(0))
+    ps = init_params(model.param_specs(cfg_s), jax.random.PRNGKey(0))
+    lu = float(model.loss_fn(pu, cfg_u, batch)[0])
+    ls = float(model.loss_fn(ps, cfg_s, batch)[0])
+    # independent inits -> only sanity-compare magnitude; exact equality is
+    # covered by stacking identical weights below for one family
+    assert abs(lu - ls) < 1.0
+
+
+def test_scan_layers_exact_equivalence_with_stacked_weights():
+    cfg_u = get_smoke_config("qwen2-7b")
+    cfg_s = cfg_u.replace(scan_layers=True)
+    model = get_model(cfg_u)
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg_u, SMOKE_SHAPE).items()}
+    pu = init_params(model.param_specs(cfg_u), jax.random.PRNGKey(0))
+    ps = init_params(model.param_specs(cfg_s), jax.random.PRNGKey(0))
+    ps = dict(ps)
+    ps["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *pu["layers"])
+    ps["embed"], ps["ln_f"] = pu["embed"], pu["ln_f"]
+    lu = float(model.loss_fn(pu, cfg_u, batch)[0])
+    ls = float(model.loss_fn(ps, cfg_s, batch)[0])
+    assert abs(lu - ls) < 5e-3
+
+
+_DECODERS = [a for a in ARCHS if a != "hubert-xlarge"]
+
+
+@pytest.mark.parametrize("arch", _DECODERS)
+def test_decode_step_runs(arch):
+    cfg, model, params, batch = _params_and_batch(arch)
+    B = 2
+    cache = init_params(model.cache_specs(cfg, B, 64), jax.random.PRNGKey(1))
+    tokens = jnp.array([1, 2], jnp.int32)
+    logits, cache = jax.jit(
+        lambda p, c, t: model.decode_step(p, cfg, c, t)
+    )(params, cache, tokens)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert int(cache["lengths"][0]) == 1
+    logits2, cache = model.decode_step(params, cfg, cache, tokens)
+    assert int(cache["lengths"][0]) == 2
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "rwkv6-7b", "recurrentgemma-9b"])
+def test_prefill_matches_stepwise_decode(arch):
+    """Prefilling a prompt == feeding it token-by-token through decode_step."""
+    cfg, model, params, _ = _params_and_batch(arch)
+    if cfg.family == "dense":
+        # exact-attention config for a strict equivalence check
+        import dataclasses
+
+        cfg = cfg.replace(attention=dataclasses.replace(cfg.attention, kind="full"))
+    B, S = 2, 16
+    toks = np.random.default_rng(3).integers(1, cfg.vocab, (B, S)).astype(np.int32)
+    cache = init_params(model.cache_specs(cfg, B, 64), jax.random.PRNGKey(1))
+    logits_p, cache_p = model.prefill(params, cfg, {"tokens": jnp.asarray(toks)}, cache)
+
+    cache_d = init_params(model.cache_specs(cfg, B, 64), jax.random.PRNGKey(1))
+    for t in range(S):
+        logits_d, cache_d = model.decode_step(params, cfg, cache_d, jnp.asarray(toks[:, t]))
+    np.testing.assert_allclose(
+        np.asarray(logits_p, np.float32), np.asarray(logits_d, np.float32),
+        atol=0.05, rtol=0.05,
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_param_specs_build(arch):
+    """The FULL configs must instantiate spec trees (no allocation) with the
+    exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    specs = model.param_specs(cfg)
+    n = count_params(specs)
+    assert n > 1e8, f"{arch}: {n}"
+    if arch == "kimi-k2-1t-a32b":
+        assert n > 0.9e12, "kimi-k2 must be ~1T params"

@@ -1,0 +1,150 @@
+"""Core MRA-2 correctness: exactness invariants, masking, decode, budgets."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mra import MraConfig, block_mean, full_attention, mra2_attention
+from repro.core.mra_decode import (
+    PyramidState,
+    full_decode_attention,
+    mra2_decode_attention,
+)
+
+
+def _qkv(rng, B=2, Hq=4, Hkv=2, N=128, D=16, dtype=jnp.float32, scale=1.0):
+    q = jnp.asarray(rng.standard_normal((B, Hq, N, D)) * scale, dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, N, D)) * scale, dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, N, D)) * scale, dtype)
+    return q, k, v
+
+
+def _rel(a, b):
+    return float(jnp.linalg.norm((a - b).astype(jnp.float32))
+                 / jnp.linalg.norm(b.astype(jnp.float32)))
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("variant", ["full", "sparse"])
+def test_full_budget_equals_softmax(rng, causal, variant):
+    q, k, v = _qkv(rng)
+    cfg = MraConfig(block_size=16, blocks_per_row=8, variant=variant, causal=causal)
+    out = mra2_attention(q, k, v, cfg)
+    ref = full_attention(q, k, v, causal=causal)
+    assert _rel(out, ref) < 1e-5
+
+
+def test_error_decreases_with_budget(rng):
+    q, k, v = _qkv(rng, N=256)
+    ref = full_attention(q, k, v)
+    errs = []
+    for bpr in (1, 2, 4, 8, 16):
+        cfg = MraConfig(block_size=16, blocks_per_row=bpr)
+        errs.append(_rel(mra2_attention(q, k, v, cfg), ref))
+    assert errs[-1] < 1e-5  # full budget
+    assert errs[0] > errs[-1]
+    # monotone within small tolerance (selection is greedy, not optimal)
+    for a, b in zip(errs, errs[1:]):
+        assert b <= a * 1.05
+
+
+def test_ragged_length_padding(rng):
+    q, k, v = _qkv(rng, N=100)
+    cfg = MraConfig(block_size=16, blocks_per_row=7)
+    out = mra2_attention(q, k, v, cfg)
+    ref = full_attention(q, k, v)
+    assert _rel(out, ref) < 1e-5
+    assert out.shape == ref.shape
+
+
+def test_key_mask_matches_masked_full(rng):
+    q, k, v = _qkv(rng, B=2, N=128)
+    key_mask = jnp.asarray(rng.random((2, 128)) > 0.3)
+    cfg = MraConfig(block_size=16, blocks_per_row=8)
+    out = mra2_attention(q, k, v, cfg, key_mask=key_mask)
+    ref = full_attention(q, k, v, key_mask=key_mask)
+    assert _rel(out, ref) < 1e-5
+
+
+def test_large_scores_no_nan(rng):
+    """Post-RoPE-scale inputs: exp must not overflow (two-level stabilizer)."""
+    q, k, v = _qkv(rng, scale=12.0)
+    cfg = MraConfig(block_size=16, blocks_per_row=2, causal=True)
+    out = mra2_attention(q, k, v, cfg)
+    assert bool(jnp.isfinite(out).all())
+    g = jax.grad(lambda q: mra2_attention(q, k, v, cfg).sum())(q)
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_gqa_matches_expanded(rng):
+    q, k, v = _qkv(rng, Hq=8, Hkv=2)
+    cfg = MraConfig(block_size=16, blocks_per_row=4)
+    out = mra2_attention(q, k, v, cfg)
+    kx = jnp.repeat(k, 4, axis=1)
+    vx = jnp.repeat(v, 4, axis=1)
+    out_x = mra2_attention(q, kx, vx, cfg)
+    assert _rel(out, out_x) < 1e-6
+
+
+def test_value_linearity(rng):
+    """A_hat does not depend on V: mra(q,k,aV) == a*mra(q,k,V)."""
+    q, k, v = _qkv(rng)
+    cfg = MraConfig(block_size=16, blocks_per_row=3)
+    out1 = mra2_attention(q, k, 3.0 * v, cfg)
+    out2 = 3.0 * mra2_attention(q, k, v, cfg)
+    assert _rel(out1, out2) < 1e-6
+
+
+def test_block_mean_downsample():
+    x = jnp.arange(32, dtype=jnp.float32).reshape(1, 32, 1)
+    ds = block_mean(x, 8)
+    np.testing.assert_allclose(np.asarray(ds[0, :, 0]), [3.5, 11.5, 19.5, 27.5])
+
+
+# ---------------------------------------------------------------------------- #
+# decode
+# ---------------------------------------------------------------------------- #
+def test_decode_full_budget_exact(rng):
+    B, Hq, Hkv, S, D, b = 2, 4, 2, 256, 16, 16
+    q = jnp.asarray(rng.standard_normal((B, Hq, 1, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), jnp.float32)
+    lengths = jnp.array([201, 256])
+    cfg = MraConfig(block_size=b)
+    out = mra2_decode_attention(q, k, v, lengths, cfg, decode_blocks=S // b)
+    ref = full_decode_attention(q, k, v, lengths)
+    assert _rel(out, ref) < 1e-5
+
+
+def test_decode_error_decreases(rng):
+    B, Hq, Hkv, S, D, b = 2, 4, 2, 512, 16, 16
+    q = jnp.asarray(rng.standard_normal((B, Hq, 1, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), jnp.float32)
+    lengths = jnp.array([512, 480])
+    ref = full_decode_attention(q, k, v, lengths)
+    cfg = MraConfig(block_size=b)
+    errs = [
+        _rel(mra2_decode_attention(q, k, v, lengths, cfg, decode_blocks=m), ref)
+        for m in (2, 8, 32)
+    ]
+    assert errs[0] > errs[-1]
+    assert errs[-1] < 1e-5
+
+
+def test_decode_pyramid_incremental_matches_recompute(rng):
+    B, Hq, Hkv, S, D, b = 2, 4, 2, 128, 16, 16
+    nb = S // b
+    q = jnp.asarray(rng.standard_normal((B, Hq, 1, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), jnp.float32)
+    lengths = jnp.array([100, 128])
+    pyr = PyramidState.init(B, Hkv, nb, D)
+    for t in range(S):
+        m = (t < lengths).astype(jnp.float32)[:, None, None]
+        pos = jnp.minimum(jnp.full((B,), t), lengths - 1)
+        pyr = pyr.append(k[:, :, t] * m, v[:, :, t] * m, pos, b)
+    cfg = MraConfig(block_size=b)
+    out_p = mra2_decode_attention(q, k, v, lengths, cfg, decode_blocks=4, pyramid=pyr)
+    out_r = mra2_decode_attention(q, k, v, lengths, cfg, decode_blocks=4)
+    assert _rel(out_p, out_r) < 1e-6

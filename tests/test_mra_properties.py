@@ -1,0 +1,99 @@
+"""Property-based tests (hypothesis) for MRA invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.mra import MraConfig, block_mean, full_attention, mra2_attention
+
+hypothesis.settings.register_profile(
+    "ci", max_examples=15, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+shapes = st.tuples(
+    st.sampled_from([1, 2]),          # B
+    st.sampled_from([1, 2, 4]),       # Hkv
+    st.sampled_from([1, 2]),          # group
+    st.sampled_from([32, 48, 64]),    # N
+    st.sampled_from([4, 8]),          # D
+)
+
+
+def _data(seed, B, Hkv, G, N, D):
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.standard_normal((B, Hkv * G, N, D)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((B, Hkv, N, D)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((B, Hkv, N, D)), jnp.float32)
+    return q, k, v
+
+
+@given(shapes, st.integers(0, 2**31 - 1), st.booleans())
+def test_output_is_convex_combination_of_values(shape, seed, causal):
+    """Each output row lies in the convex hull of value rows (per channel)."""
+    B, Hkv, G, N, D = shape
+    q, k, v = _data(seed, B, Hkv, G, N, D)
+    cfg = MraConfig(block_size=8, blocks_per_row=2, causal=causal)
+    out = mra2_attention(q, k, v, cfg)
+    vmin = jnp.min(v, axis=2, keepdims=True)  # (B,Hkv,1,D)
+    vmax = jnp.max(v, axis=2, keepdims=True)
+    vmin = jnp.repeat(vmin, Hkv * G // Hkv, axis=1)
+    vmax = jnp.repeat(vmax, Hkv * G // Hkv, axis=1)
+    eps = 1e-4
+    assert bool(jnp.all(out >= vmin - eps)), "below value min"
+    assert bool(jnp.all(out <= vmax + eps)), "above value max"
+
+
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_full_budget_exactness_property(shape, seed):
+    B, Hkv, G, N, D = shape
+    q, k, v = _data(seed, B, Hkv, G, N, D)
+    nb = -(-N // 8)
+    cfg = MraConfig(block_size=8, blocks_per_row=nb)
+    out = mra2_attention(q, k, v, cfg)
+    ref = full_attention(q, k, v)
+    err = float(jnp.linalg.norm(out - ref) / (jnp.linalg.norm(ref) + 1e-9))
+    assert err < 1e-4
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8, 16]),
+       st.floats(-3, 3), st.floats(0.1, 4))
+def test_block_mean_linearity(seed, block, shift, scale):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((2, 32, 4)), jnp.float32)
+    y = jnp.asarray(r.standard_normal((2, 32, 4)), jnp.float32)
+    lhs = block_mean(scale * x + shift * y, block)
+    rhs = scale * block_mean(x, block) + shift * block_mean(y, block)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_softmax_shift_invariance(seed):
+    """Adding a constant to all logits (k -> k + c*1 with q.1 fixed) is absorbed.
+
+    Equivalent check: scaling exp via softmax_scale=0 makes attention uniform.
+    """
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.standard_normal((1, 2, 32, 4)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((1, 2, 32, 4)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((1, 2, 32, 4)), jnp.float32)
+    cfg = MraConfig(block_size=8, blocks_per_row=4, softmax_scale=0.0)
+    out = mra2_attention(q, k, v, cfg)
+    uniform = jnp.broadcast_to(jnp.mean(v, axis=2, keepdims=True), v.shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(uniform), atol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]))
+def test_head_permutation_equivariance(seed, Hkv):
+    """Permuting heads permutes outputs identically."""
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.standard_normal((1, Hkv, 32, 4)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((1, Hkv, 32, 4)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((1, Hkv, 32, 4)), jnp.float32)
+    perm = np.asarray(np.random.default_rng(seed + 1).permutation(Hkv))
+    cfg = MraConfig(block_size=8, blocks_per_row=2)
+    out = mra2_attention(q, k, v, cfg)
+    out_p = mra2_attention(q[:, perm], k[:, perm], v[:, perm], cfg)
+    np.testing.assert_allclose(np.asarray(out[:, perm]), np.asarray(out_p), atol=1e-5)

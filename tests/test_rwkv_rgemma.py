@@ -1,0 +1,88 @@
+"""RWKV6 and RecurrentGemma family-specific correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import get_model, init_params
+from repro.models.recurrentgemma import _decay, _rglru_scan
+from repro.models.rwkv6 import _decay_clamp, wkv_chunked, wkv_scan
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_wkv_chunked_matches_scan(rng, chunk):
+    B, H, T, dh = 2, 3, 64, 8
+    r = jnp.asarray(rng.standard_normal((B, H, T, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, T, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, H, T, dh)), jnp.float32)
+    lw = jnp.maximum(
+        -jnp.exp(jnp.asarray(rng.standard_normal((B, H, T, dh)), jnp.float32)),
+        -_decay_clamp(chunk),
+    )
+    u = jnp.asarray(rng.standard_normal((H, dh)), jnp.float32)
+    y_c = wkv_chunked(r, k, v, lw, u, chunk)
+    y_s = wkv_scan(r, k, v, lw, u)
+    err = float(jnp.abs(y_c - y_s).max() / (jnp.abs(y_s).max() + 1e-9))
+    assert err < 1e-4
+
+
+def test_rwkv_prefill_state_matches_decode_continuation(rng):
+    """decode after prefill == decode after stepwise feeding."""
+    cfg = get_smoke_config("rwkv6-7b")
+    model = get_model(cfg)
+    params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+    B, S = 2, cfg.rwkv_chunk * 2
+    toks = np.random.default_rng(1).integers(1, cfg.vocab, (B, S)).astype(np.int32)
+    cache_p = init_params(model.cache_specs(cfg, B, S), jax.random.PRNGKey(1))
+    logits_p, cache_p = model.prefill(params, cfg, {"tokens": jnp.asarray(toks)}, cache_p)
+    cache_d = init_params(model.cache_specs(cfg, B, S), jax.random.PRNGKey(1))
+    for t in range(S):
+        logits_d, cache_d = model.decode_step(params, cfg, cache_d, jnp.asarray(toks[:, t]))
+    np.testing.assert_allclose(
+        np.asarray(cache_p["state"], np.float32), np.asarray(cache_d["state"], np.float32),
+        atol=1e-3, rtol=1e-2,
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_p, np.float32), np.asarray(logits_d, np.float32),
+        atol=0.05, rtol=0.05,
+    )
+
+
+def test_rglru_associative_scan_matches_loop(rng):
+    B, T, W = 2, 32, 8
+    a = jnp.asarray(rng.random((B, T, W)) * 0.9 + 0.05, jnp.float32)
+    bx = jnp.asarray(rng.standard_normal((B, T, W)), jnp.float32)
+    _, h = _rglru_scan(a, bx)
+    href = np.zeros((B, W), np.float32)
+    out = np.zeros((B, T, W), np.float32)
+    for t in range(T):
+        href = np.asarray(a[:, t]) * href + np.asarray(bx[:, t])
+        out[:, t] = href
+    np.testing.assert_allclose(np.asarray(h), out, atol=1e-4, rtol=1e-4)
+
+
+def test_rglru_decay_stable_near_one():
+    lam = jnp.array([-10.0, 0.0, 10.0])
+    gate = jnp.ones(3)
+    a, mult = _decay(lam, gate)
+    assert bool(jnp.all((a > 0) & (a < 1)))
+    assert bool(jnp.isfinite(mult).all())
+    np.testing.assert_allclose(np.asarray(a**2 + mult**2), 1.0, atol=1e-5)
+
+
+def test_rgemma_ring_buffer_decode_matches_prefill(rng):
+    cfg = get_smoke_config("recurrentgemma-9b")
+    model = get_model(cfg)
+    params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = np.random.default_rng(2).integers(1, cfg.vocab, (B, S)).astype(np.int32)
+    cache_p = init_params(model.cache_specs(cfg, B, 64), jax.random.PRNGKey(1))
+    logits_p, _ = model.prefill(params, cfg, {"tokens": jnp.asarray(toks)}, cache_p)
+    cache_d = init_params(model.cache_specs(cfg, B, 64), jax.random.PRNGKey(1))
+    for t in range(S):
+        logits_d, cache_d = model.decode_step(params, cfg, cache_d, jnp.asarray(toks[:, t]))
+    np.testing.assert_allclose(
+        np.asarray(logits_p, np.float32), np.asarray(logits_d, np.float32),
+        atol=0.05, rtol=0.05,
+    )

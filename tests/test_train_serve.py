@@ -1,0 +1,100 @@
+"""Training loop (incl. checkpoint/restart) and serving engine tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeCfg
+from repro.data import make_batch
+from repro.models import get_model, init_params
+from repro.optim import AdamW, cosine_schedule
+from repro.serve import Engine, Request
+from repro.train import TrainConfig, make_train_step, train
+
+SHAPE = ShapeCfg("tiny", 64, 4, "train")
+
+
+def test_train_step_decreases_loss():
+    cfg = get_smoke_config("qwen3-1.7b")
+    model = get_model(cfg)
+    tc = TrainConfig(steps=8, lr=3e-3, warmup=2)
+    opt = AdamW(weight_decay=0.0)
+    step_fn = jax.jit(make_train_step(cfg, tc, opt, cosine_schedule(3e-3, 2, 8)))
+    params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, SHAPE).items()}
+    losses = []
+    for _ in range(8):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_microbatch_accumulation_matches_fullbatch():
+    cfg = get_smoke_config("qwen3-1.7b")
+    model = get_model(cfg)
+    opt = AdamW(weight_decay=0.0)
+    lr = cosine_schedule(1e-3, 1, 10)
+    params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, SHAPE).items()}
+    outs = {}
+    for mb in (1, 2):
+        tc = TrainConfig(microbatches=mb)
+        step = jax.jit(make_train_step(cfg, tc, opt, lr))
+        p, s, m = step(params, opt.init(params), batch)
+        outs[mb] = (p, m)
+    p1, p2 = outs[1][0], outs[2][0]
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
+        p1, p2)
+    assert max(jax.tree.leaves(diffs)) < 5e-3
+
+
+def test_grad_compression_close_to_exact():
+    cfg = get_smoke_config("qwen3-1.7b")
+    opt = AdamW(weight_decay=0.0)
+    lr = cosine_schedule(1e-3, 1, 10)
+    params = init_params(get_model(cfg).param_specs(cfg), jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, SHAPE).items()}
+    m_ref = jax.jit(make_train_step(cfg, TrainConfig(microbatches=2), opt, lr))(
+        params, opt.init(params), batch)[2]
+    m_cmp = jax.jit(make_train_step(
+        cfg, TrainConfig(microbatches=2, grad_compression="bf16_ef"), opt, lr))(
+        params, opt.init(params), batch)[2]
+    assert abs(float(m_ref["loss"]) - float(m_cmp["loss"])) < 1e-3
+    assert abs(float(m_ref["grad_norm"]) - float(m_cmp["grad_norm"])) < 0.05 * float(
+        m_ref["grad_norm"]) + 1e-3
+
+
+def test_train_driver_checkpoint_restart(tmp_path):
+    cfg = get_smoke_config("qwen3-1.7b")
+    tc1 = TrainConfig(steps=4, lr=1e-3, warmup=1, ckpt_dir=str(tmp_path), ckpt_every=2,
+                      log_every=100)
+    p1, o1, m1 = train(cfg, SHAPE, tc1)
+    # restart from step-4 checkpoint and continue to 6
+    tc2 = TrainConfig(steps=6, lr=1e-3, warmup=1, ckpt_dir=str(tmp_path), ckpt_every=2,
+                      log_every=100)
+    p2, o2, m2 = train(cfg, SHAPE, tc2)
+    assert int(o2.step) == 6
+    # uninterrupted run to 6 matches the restarted one (bit-identical data)
+    tc3 = TrainConfig(steps=6, lr=1e-3, warmup=1, log_every=100)
+    p3, o3, m3 = train(cfg, SHAPE, tc3)
+    d = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
+        p2, p3)
+    assert max(jax.tree.leaves(d)) < 5e-3
+
+
+def test_serve_engine_generates():
+    cfg = get_smoke_config("qwen3-1.7b")
+    model = get_model(cfg)
+    params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, slots=2, max_len=64)
+    reqs = [Request(prompt=np.array([3, 5, 7]), max_new_tokens=4),
+            Request(prompt=np.array([11, 13]), max_new_tokens=4)]
+    done = eng.run(reqs)
+    assert len(done) == 2
+    for r in done:
+        assert r.out is not None and len(r.out) == 4
+        assert int(np.max(r.out)) < cfg.padded_vocab
