@@ -1,0 +1,67 @@
+"""Kernel-vs-jnp timing: fwd and fwd+bwd through the MRA-2 attention paths.
+
+Times three routes over the same inputs/selection budget:
+
+  * jnp           — pure gather/scatter path (mra2_attention, no kernel)
+  * kernel        — Pallas fwd + fused Pallas bwd (interpret mode off-TPU)
+  * kernel_jnpbwd — Pallas fwd + jnp fallback bwd (the dispatch boundary)
+
+On a CPU host the Pallas kernels run in interpret mode, so the absolute
+numbers only demonstrate that the training path executes end-to-end; the
+kernel-vs-jnp *ratio* is only meaningful on a real TPU, where interpret
+flips to False automatically. The derived column reports the max |grad|
+difference vs the jnp path (a cheap online correctness check).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mra import MraConfig, mra2_attention
+
+from .common import structured_qkv, time_call
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def run(emit):
+    rng = np.random.default_rng(5)
+    interpret = not _on_tpu()
+    # interpret mode executes the kernel body per grid step in Python — keep
+    # the CPU shape small; TPU runs get a production-ish shape.
+    N, H, D, b = (512, 4, 64, 32) if _on_tpu() else (128, 2, 16, 16)
+    q, k, v = structured_qkv(rng, B=1, H=H, N=N, D=D)
+
+    def cfg(use_kernel, bwd="pallas"):
+        return MraConfig(block_size=b, blocks_per_row=4, causal=True,
+                         use_kernel=use_kernel, kernel_bwd=bwd,
+                         interpret=interpret)
+
+    routes = {
+        "jnp": cfg(False),
+        "kernel": cfg(True),
+        "kernel_jnpbwd": cfg(True, bwd="jnp"),
+    }
+
+    def loss_fn(c):
+        return lambda q, k, v: jnp.sum(jnp.tanh(mra2_attention(q, k, v, c)))
+
+    grads = {}
+    for name, c in routes.items():
+        us_f = time_call(lambda q, k, v: mra2_attention(q, k, v, c), q, k, v)
+        emit(f"kernel_bench_fwd_{name}", us_f, f"interpret={interpret}")
+        gfn = jax.jit(jax.grad(loss_fn(c), argnums=(0, 1, 2)))
+        grads[name] = jax.block_until_ready(gfn(q, k, v))  # doubles as warmup
+        us_b = time_call(gfn, q, k, v)
+        emit(f"kernel_bench_fwdbwd_{name}", us_b, f"interpret={interpret}")
+
+    # online parity check: kernel-route grads vs the jnp path
+    for name in ("kernel", "kernel_jnpbwd"):
+        diff = max(
+            float(jnp.abs(a - b).max())
+            for a, b in zip(grads[name], grads["jnp"])
+        )
+        emit(f"kernel_bench_graddiff_{name}", 0.0, f"{diff:.2e}")

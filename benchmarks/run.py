@@ -8,6 +8,7 @@ relative error, NLL, scaling exponent, or a boolean claim check).
   scaling       -> paper Tab. 7 (runtime scaling 256..4096)
   swap_eval     -> paper Tab. 1/2 (drop-in compatibility with trained weights)
   decode_bench  -> beyond-paper MRA decode (KV-block selection)
+  kernel_bench  -> fwd+bwd Pallas-kernel vs jnp path timing + grad parity
 """
 import argparse
 import sys
@@ -18,7 +19,8 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma-separated module subset")
     args = ap.parse_args()
 
-    from . import approx_error, decode_bench, entropy_error, scaling, swap_eval
+    from . import (approx_error, decode_bench, entropy_error, kernel_bench,
+                   scaling, swap_eval)
 
     modules = {
         "approx_error": approx_error,
@@ -26,6 +28,7 @@ def main() -> None:
         "scaling": scaling,
         "swap_eval": swap_eval,
         "decode_bench": decode_bench,
+        "kernel_bench": kernel_bench,
     }
     chosen = args.only.split(",") if args.only else list(modules)
 

@@ -43,8 +43,12 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--attention", default="mra2,full",
                     help="comma-separated attention kinds to train")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route MRA attention through the fused Pallas "
+                         "fwd+bwd kernels (interpret mode off-TPU)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
+    interpret = jax.devices()[0].platform != "tpu"
 
     p = PRESETS[args.preset]
     shape = ShapeCfg("train", p["seq"], p["batch"], "train")
@@ -52,7 +56,9 @@ def main():
     for kind in args.attention.split(","):
         cfg = build_cfg(p, kind)
         tc = TrainConfig(steps=args.steps, lr=1e-3, warmup=20, log_every=20,
-                         ckpt_dir=args.ckpt_dir and f"{args.ckpt_dir}/{kind}")
+                         ckpt_dir=args.ckpt_dir and f"{args.ckpt_dir}/{kind}",
+                         use_kernel=args.use_kernel or None,
+                         kernel_interpret=args.use_kernel and interpret)
         hist = []
         print(f"=== training with attention={kind} ===")
         train(cfg, shape, tc, on_metrics=lambda s, m: hist.append(m["loss"]))

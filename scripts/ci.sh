@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# CI smoke: install dev deps (best effort — the offline container already
+# bakes in jax/pytest), then run the fast test tier on CPU. The Pallas
+# kernels run in interpret mode inside the tests (tests/test_differential.py,
+# tests/test_kernels_block_sparse.py), so the TPU fwd+bwd path is exercised
+# end-to-end on every CPU run.
+#
+# Usage:
+#   scripts/ci.sh          # fast tier (default: pytest -m "not slow")
+#   scripts/ci.sh slow     # the slow tier only
+#   scripts/ci.sh all      # everything
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! python -c "import hypothesis" >/dev/null 2>&1; then
+  # offline containers skip this cleanly; hypothesis-only tests importorskip
+  pip install --retries 0 --timeout 5 -r requirements-dev.txt \
+    || echo "[ci] dev-dep install skipped (offline?)"
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+case "${1:-fast}" in
+  fast) python -m pytest -x -q ;;                # pytest.ini deselects slow
+  slow) python -m pytest -x -q -m slow ;;
+  all)  python -m pytest -x -q -m "" ;;
+  *)    echo "usage: scripts/ci.sh [fast|slow|all]" >&2; exit 2 ;;
+esac

@@ -40,6 +40,15 @@ class ModelConfig:
     max_seq: int = 8192  # learned-positions table size
     moe: Optional[MoESpec] = None
     attention: AttentionSpec = dataclasses.field(default_factory=AttentionSpec)
+    # Pallas kernel routing for the MRA attention layers. When
+    # attn_use_kernel is set, cfg.attn_spec overrides the AttentionSpec's
+    # kernel fields so train/serve entry points can flip the fused kernel
+    # path (fwd + bwd) on without rebuilding the spec. attn_interpret runs
+    # the kernels in interpret mode (CPU CI); attn_kernel_bwd selects the
+    # backward implementation ("pallas" fused kernels | "jnp" fallback).
+    attn_use_kernel: bool = False
+    attn_interpret: bool = False
+    attn_kernel_bwd: str = "pallas"
     # hybrid (recurrentgemma): repeating block pattern
     block_pattern: Tuple[str, ...] = ()  # e.g. ("rglru", "rglru", "local")
     local_window: int = 2048
@@ -78,6 +87,18 @@ class ModelConfig:
     @property
     def hd(self) -> int:
         return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def attn_spec(self) -> AttentionSpec:
+        """cfg.attention with the model-level kernel routing applied."""
+        if not self.attn_use_kernel:
+            return self.attention
+        return dataclasses.replace(
+            self.attention,
+            use_kernel=True,
+            interpret=self.attn_interpret,
+            kernel_bwd=self.attn_kernel_bwd,
+        )
 
     @property
     def padded_vocab(self) -> int:

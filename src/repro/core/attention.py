@@ -35,6 +35,7 @@ class AttentionSpec:
     local_window: int = 1024
     softmax_scale: Optional[float] = None
     use_kernel: bool = False
+    kernel_bwd: str = "pallas"  # bwd impl on the kernel path: pallas | jnp
     interpret: bool = False
     # beyond-paper (§Perf Y3): int8 KV cache with per-token-per-head scales —
     # halves decode memory footprint and HBM traffic; MRA decode dequantizes
@@ -49,8 +50,12 @@ class AttentionSpec:
             causal=causal,
             softmax_scale=self.softmax_scale,
             use_kernel=self.use_kernel,
+            kernel_bwd=self.kernel_bwd,
             interpret=self.interpret,
         )
+
+    def replace(self, **kw) -> "AttentionSpec":
+        return dataclasses.replace(self, **kw)
 
 
 def self_attention(

@@ -54,9 +54,12 @@ class MraConfig:
       softmax_scale: score scale; None -> 1/sqrt(head_dim).
       compute_dtype: dtype for score computation/accumulation.
       use_kernel: route the high-resolution block computation through the
-        Pallas TPU kernel (kernels/block_sparse_attn). The pure-jnp path is
-        used for training backward and CPU dry-runs.
-      interpret: run the Pallas kernel in interpret mode (CPU validation).
+        Pallas TPU kernels (kernels/block_sparse_attn), forward *and*
+        backward; handles padded/masked sequences and causal selection, so
+        it serves training and arbitrary-length traffic (DESIGN.md §3).
+      kernel_bwd: backward implementation when use_kernel — "pallas" (fused
+        recompute kernels) or "jnp" (gather/recompute fallback, kernels/ref).
+      interpret: run the Pallas kernels in interpret mode (CPU validation).
     """
 
     block_size: int = 32
@@ -67,6 +70,7 @@ class MraConfig:
     softmax_scale: Optional[float] = None
     compute_dtype: jnp.dtype = jnp.float32
     use_kernel: bool = False
+    kernel_bwd: str = "pallas"
     interpret: bool = False
 
     def budget(self, n: int) -> int:
@@ -206,14 +210,12 @@ def mra2_attention(
     # blocks whose (possibly bonused) score is still NEG_INF were never allowed
     sel_valid = top_vals > (NEG_INF * 0.5)
 
-    # ---- stabilizer: per-query-block coarse row max ----------------------------
-    c = jnp.max(coarse_m, axis=-1)  # (B,Hkv,G,nb)
-    c = jnp.maximum(c, NEG_INF * 0.5)  # guard rows with no allowed block
-
-    # background support (needed both for the low-res term and for the
-    # stabilizer: c_bg is the max coarse score among *background* blocks —
-    # rows whose background is empty must not be stabilized above their own
-    # fine scores, or every exp underflows and the row dies; see tests)
+    # ---- background support -----------------------------------------------------
+    # Needed both for the low-res term and for the stabilizer: c_bg is the
+    # max coarse score among *background* blocks — rows whose background is
+    # empty must not be stabilized above their own fine scores, or every exp
+    # underflows and the row dies; see tests. Both high-res paths derive the
+    # exact per-token stabilizer c_tok = max(fine row max, c_bg) from it.
     sel_grid = jnp.zeros((B, Hkv, G, nb * nb), bool)
     sel_grid = jax.vmap(jax.vmap(jax.vmap(lambda z, i, val: z.at[i].set(val))))(
         sel_grid, top_idx, sel_valid
@@ -223,40 +225,49 @@ def mra2_attention(
     if cfg.variant == "full":
         c_bg = jnp.max(jnp.where(bg, coarse_m, NEG_INF), axis=-1)  # (B,Hkv,G,nb)
     else:
-        c_bg = jnp.full(c.shape, NEG_INF)
+        c_bg = jnp.full((B, Hkv, G, nb), NEG_INF)
 
     # ---- high-resolution term ---------------------------------------------------
     if cfg.use_kernel:
-        # Pallas TPU path (kernels/block_sparse_attn.py). Requires an unpadded,
-        # unmasked sequence (serving/perf path); the jnp path below is the
-        # general/topology-flexible one. The kernel stabilizes with the
-        # block-level coarse max + exp clamp; the jnp path uses the exact
-        # two-level (per-token) stabilizer — mathematically identical, so the
-        # paths agree to fp32 rounding.
-        if N % b != 0:
-            raise ValueError("kernel path requires seq_len % block_size == 0")
+        # Pallas TPU path (kernels/block_sparse_attn.py), fwd + fused bwd.
+        # Key padding rides into the kernel as a per-key-block mask tile, so
+        # arbitrary lengths / masked traffic stay on the kernel. The kernel
+        # raises the c_bg floor to the exact per-token score max online
+        # (flash-style rescaling) and emits it as mt == c_tok — the same
+        # two-level stabilizer as the jnp path, so the paths agree to fp32
+        # rounding and neither fwd nor bwd can overflow.
         from repro.kernels.ops import block_sparse_attention
 
         flags = sel_valid.astype(jnp.int32)
         if cfg.causal:
             flags = flags | (2 * (x_idx == y_idx)).astype(jnp.int32)
         BHG = B * Hkv * G
-        out_f, rs_f = block_sparse_attention(
+        km_kv = jnp.broadcast_to(key_mask[:, None], (B, Hkv, n)).reshape(
+            B * Hkv, n
+        ).astype(jnp.int32)
+        c_floor = jnp.maximum(c_bg, NEG_INF * 0.5)  # keep exp args finite
+        out_f, rs_f, mt_f = block_sparse_attention(
             q_g.reshape(BHG, n, D),
             k_c.reshape(B * Hkv, n, D),
             v_c.reshape(B * Hkv, n, D),
-            c.reshape(BHG, nb),
+            c_floor.reshape(BHG, nb).astype(jnp.float32),
             x_idx.reshape(BHG, m).astype(jnp.int32),
             y_idx.reshape(BHG, m).astype(jnp.int32),
             flags.reshape(BHG, m),
-            scale,
-            b,
-            cfg.interpret,
+            km_kv,
+            scale=scale,
+            block_size=b,
+            interpret=cfg.interpret,
+            bwd_impl=cfg.kernel_bwd,
         )
         out_hr = out_f.reshape(B, Hkv, G, nb, b, D)
         rs_hr = rs_f.reshape(B, Hkv, G, nb, b)
-        adj = jnp.ones((B, Hkv, G, nb, b), cdt)
-        c_base = c  # kernel stabilizes with the block-level coarse max
+        mt = jax.lax.stop_gradient(mt_f).reshape(B, Hkv, G, nb, b)
+        # adj = exp(c_bg - c_tok): rescales the block-stabilized background
+        # onto the kernel's per-token stabilizer (min guards c_bg = NEG_INF
+        # against the c_floor clamp)
+        adj = jnp.exp(jnp.minimum(c_bg[..., None] - mt, 0.0)).astype(cdt)
+        c_base = c_bg
     else:
         out_hr, rs_hr, adj = _high_res_jnp(
             q_g, k_c, v_c, km, c_bg, x_idx, y_idx, sel_valid, cfg, scale, nb

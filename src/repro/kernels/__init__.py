@@ -1,11 +1,16 @@
 """Pallas TPU kernels for the paper's perf-critical block-sparsity operators.
 
-block_sparse_attn.py — pl.pallas_call + PrefetchScalarGridSpec kernel for the
-MRA-2 high-resolution term (data-dependent block gathers via SMEM indices,
-sequential-grid accumulation, fp32 MXU accumulation).
-ops.py  — jit'd public wrapper (sorting, first-visit flags, custom VJP whose
-backward is a flash-style jnp recompute).
-ref.py  — pure-jnp oracle used by the interpret-mode kernel tests.
+block_sparse_attn.py — pl.pallas_call + PrefetchScalarGridSpec kernels for
+the MRA-2 high-resolution term, forward AND backward (data-dependent block
+gathers via SMEM indices, sequential-grid accumulation, flash-style online
+softmax stabilization, fp32 MXU accumulation). Key-padding masks and causal
+flags ride along, so the kernels serve training and arbitrary-length
+traffic (DESIGN.md §3).
+ops.py  — jit'd public wrapper (sorting, first-visit flags, coverage
+padding, custom VJP dispatching to the fused Pallas backward with a jnp
+fallback).
+ref.py  — pure-jnp fwd/bwd oracle shared by the interpret-mode kernel
+tests, the differential harness, and the custom-VJP jnp fallback.
 """
 from .ops import block_sparse_attention
-from .ref import block_sparse_attention_ref
+from .ref import block_sparse_attention_bwd_ref, block_sparse_attention_ref

@@ -1,26 +1,42 @@
-"""Jit'd public wrapper for the block-sparse attention kernel.
+"""Jit'd public wrapper for the block-sparse attention kernels (fwd + bwd).
 
 ``block_sparse_attention`` sorts the selected block pairs by query block
 (making output-tile revisits consecutive, see block_sparse_attn.py), derives
-the first-visit flags, dispatches to the Pallas kernel, and provides a
-custom VJP whose backward pass is the flash-style recompute in pure jnp
-(no activation of size O(m·b²) is saved).
+the first-visit flags, dispatches to the Pallas forward kernel, and provides
+a custom VJP. The backward pass is a flash-style recompute (no activation of
+size O(m·b²) is saved; only the (BHG, n) per-token stabilizer ``mt`` rides
+along as a residual) with two implementations selected by the static
+``bwd_impl`` argument:
+
+  * ``"pallas"`` (default): the fused Pallas backward kernels — one pass
+    sorted by query block (dq), one pass flattened per KV head and sorted
+    by key block (dk, dv with the GQA group reduction fused in).
+  * ``"jnp"``: the pure-jnp gather/recompute oracle (kernels/ref.py), used
+    as the CPU fallback and as the differential-testing baseline.
+
+The stabilizer is gradient-transparent by contract: cotangents of the
+``mt`` output are ignored and dc ≡ 0 (stabilizers cancel in the caller's
+normalized output; the pure-jnp MRA path stop-gradients its per-token
+stabilizer the same way).
 
 Contract: every query block id in [0, nb) must appear in ``x_idx`` at least
 once per row — guaranteed by MraConfig.force_diagonal (the default); the
-kernel leaves unvisited output tiles uninitialized otherwise.
+forward kernel leaves unvisited output tiles uninitialized otherwise. The
+backward needs the same coverage for *key* blocks; ``_bwd`` guarantees both
+by appending one invalid (zero-contribution) pair per block id before
+sorting, so it holds for arbitrary index sets.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .block_sparse_attn import block_sparse_attention_fwd
-from .ref import block_sparse_attention_ref
+from .block_sparse_attn import block_sparse_attention_bwd, block_sparse_attention_fwd
+from .ref import block_sparse_attention_bwd_ref
 
 
 def _float0(x):
@@ -28,6 +44,7 @@ def _float0(x):
 
 
 def _prepare(x_idx, y_idx, flags):
+    """Sort pairs by query block; derive first-visit flags."""
     order = jnp.argsort(x_idx, axis=-1, stable=True)
     xs = jnp.take_along_axis(x_idx, order, axis=-1)
     ys = jnp.take_along_axis(y_idx, order, axis=-1)
@@ -38,7 +55,111 @@ def _prepare(x_idx, y_idx, flags):
     return xs, ys, fl, first
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
+def _prepare_kv(x_idx, y_idx, flags, G):
+    """Flatten each KV head's G groups of pairs into one list sorted by key
+    block. Returns (BHKV, G·m) arrays: owning BHG row, x, y, first, flags."""
+    BHG, m = x_idx.shape
+    BHKV = BHG // G
+    M2 = G * m
+    rows = jnp.broadcast_to(
+        jnp.arange(BHG, dtype=jnp.int32)[:, None], (BHG, m)
+    ).reshape(BHKV, M2)
+    x2 = x_idx.reshape(BHKV, M2)
+    y2 = y_idx.reshape(BHKV, M2)
+    f2 = flags.reshape(BHKV, M2)
+    order = jnp.argsort(y2, axis=-1, stable=True)
+    rows = jnp.take_along_axis(rows, order, axis=-1)
+    x2 = jnp.take_along_axis(x2, order, axis=-1)
+    y2 = jnp.take_along_axis(y2, order, axis=-1)
+    f2 = jnp.take_along_axis(f2, order, axis=-1)
+    first = jnp.concatenate(
+        [jnp.ones_like(y2[:, :1]), (y2[:, 1:] != y2[:, :-1]).astype(y2.dtype)], axis=-1
+    )
+    return rows, x2, y2, first, f2
+
+
+def _coverage_pad(x_idx, y_idx, flags, nb):
+    """Append one invalid pair per block id (x = y = j, flags = 0).
+
+    Invalid pairs contribute nothing (mask bit0 unset → a ≡ 0 → zero
+    gradients) but guarantee every dq *and* dk/dv output tile is visited,
+    and therefore zero-initialized, for arbitrary index sets.
+    """
+    BHG = x_idx.shape[0]
+    pad = jnp.broadcast_to(jnp.arange(nb, dtype=jnp.int32)[None], (BHG, nb))
+    zeros = jnp.zeros((BHG, nb), jnp.int32)
+    return (
+        jnp.concatenate([x_idx, pad], axis=1),
+        jnp.concatenate([y_idx, pad], axis=1),
+        jnp.concatenate([flags, zeros], axis=1),
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10, 11))
+def _block_sparse_attention(
+    q, k, v, c, x_idx, y_idx, flags, km, scale, block_size, interpret, bwd_impl
+):
+    xs, ys, fl, first = _prepare(x_idx, y_idx, flags)
+    return block_sparse_attention_fwd(
+        q, k, v, xs.astype(jnp.int32), ys.astype(jnp.int32),
+        first.astype(jnp.int32), fl.astype(jnp.int32), c,
+        km.astype(jnp.float32),
+        scale=scale, block_size=block_size, interpret=interpret,
+    )
+
+
+def _fwd(q, k, v, c, x_idx, y_idx, flags, km, scale, block_size, interpret,
+         bwd_impl):
+    out, rowsum, mt = _block_sparse_attention(
+        q, k, v, c, x_idx, y_idx, flags, km, scale, block_size, interpret,
+        bwd_impl
+    )
+    return (out, rowsum, mt), (q, k, v, c, mt, x_idx, y_idx, flags, km)
+
+
+def _bwd(scale, block_size, interpret, bwd_impl, res, cts):
+    q, k, v, c, mt, x_idx, y_idx, flags, km = res
+    do, dr, _ = cts  # mt is gradient-transparent: its cotangent is dropped
+    b = block_size
+    nb = q.shape[1] // b
+    G = q.shape[0] // k.shape[0]
+
+    if bwd_impl == "pallas":
+        xi = x_idx.astype(jnp.int32)
+        yi = y_idx.astype(jnp.int32)
+        fl = flags.astype(jnp.int32)
+        xi, yi, fl = _coverage_pad(xi, yi, fl, nb)
+        xq, yq, flq, firstq = _prepare(xi, yi, fl)
+        rowk, xk, yk, firstk, flk = _prepare_kv(xi, yi, fl, G)
+        dq, dk, dv = block_sparse_attention_bwd(
+            q, k, v, mt,
+            do.astype(jnp.float32), dr.astype(jnp.float32),
+            km.astype(jnp.float32),
+            xq, yq, firstq, flq,
+            rowk, xk, yk, firstk, flk,
+            scale=scale, block_size=b, interpret=interpret,
+        )
+    else:
+        dq, dk, dv = block_sparse_attention_bwd_ref(
+            q, k, v, c, x_idx, y_idx, flags, km, do, dr,
+            scale=scale, block_size=b,
+        )
+
+    return (
+        dq.astype(q.dtype),
+        dk.astype(k.dtype),
+        dv.astype(v.dtype),
+        jnp.zeros_like(c),  # dc ≡ 0: the stabilizer is gradient-transparent
+        _float0(x_idx),
+        _float0(y_idx),
+        _float0(flags),
+        _float0(km),
+    )
+
+
+_block_sparse_attention.defvjp(_fwd, _bwd)
+
+
 def block_sparse_attention(
     q: jax.Array,
     k: jax.Array,
@@ -47,95 +168,41 @@ def block_sparse_attention(
     x_idx: jax.Array,
     y_idx: jax.Array,
     flags: jax.Array,
+    key_mask: Optional[jax.Array] = None,
+    *,
     scale: float = 1.0,
     block_size: int = 32,
     interpret: bool = False,
-) -> Tuple[jax.Array, jax.Array]:
-    """Unnormalized block-sparse attention numerator + row sums.
+    bwd_impl: str = "pallas",
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Unnormalized block-sparse attention numerator, row sums, stabilizer.
 
     Args:
       q: (BHG, n, d); k/v: (BHKV, n, d) with BHG % BHKV == 0 (GQA groups).
-      c: (BHG, nb) fp32 per-query-block softmax stabilizer.
+      c: (BHG, nb) fp32 stabilizer *floor* per query block (the MRA-2 coarse
+        background max, clamped above NEG_INF/2). The kernel raises it to
+        the exact per-token score max online (flash-style), so weights never
+        overflow; dc ≡ 0 by contract.
       x_idx/y_idx: (BHG, m) int32 selected (query-block, key-block) pairs.
       flags: (BHG, m) int32 — bit0: pair is valid; bit1: apply causal
         triangular mask inside the block (diagonal blocks).
+      key_mask: optional (BHKV, n) key validity (>0 = valid); padded keys
+        are excluded from scores, row sums, and gradients.
       scale: softmax scale (static).
       block_size: b (static).
-      interpret: run the Pallas kernel in interpret mode (CPU validation).
+      interpret: run the Pallas kernels in interpret mode (CPU validation).
+      bwd_impl: "pallas" (fused backward kernels) or "jnp" (ref fallback).
 
     Returns:
-      out (BHG, n, d) fp32, rowsum (BHG, n) fp32.
+      out (BHG, n, d) fp32, rowsum (BHG, n) fp32, mt (BHG, n) fp32 — the
+      numerator/row sums are stabilized by exp(−mt); mt is stop-gradient.
     """
-    xs, ys, fl, first = _prepare(x_idx, y_idx, flags)
-    return block_sparse_attention_fwd(
-        q, k, v, xs.astype(jnp.int32), ys.astype(jnp.int32),
-        first.astype(jnp.int32), fl.astype(jnp.int32), c,
-        scale=scale, block_size=block_size, interpret=interpret,
+    if bwd_impl not in ("pallas", "jnp"):
+        raise ValueError(f"bwd_impl must be 'pallas' or 'jnp', got {bwd_impl!r}")
+    if key_mask is None:
+        key_mask = jnp.ones((k.shape[0], k.shape[1]), jnp.int32)
+    return _block_sparse_attention(
+        q, k, v, c, x_idx.astype(jnp.int32), y_idx.astype(jnp.int32),
+        flags.astype(jnp.int32), key_mask.astype(jnp.int32),
+        scale, block_size, interpret, bwd_impl,
     )
-
-
-def _fwd(q, k, v, c, x_idx, y_idx, flags, scale, block_size, interpret):
-    out = block_sparse_attention(
-        q, k, v, c, x_idx, y_idx, flags, scale, block_size, interpret
-    )
-    return out, (q, k, v, c, x_idx, y_idx, flags)
-
-
-def _bwd(scale, block_size, interpret, res, cts):
-    q, k, v, c, x_idx, y_idx, flags = res
-    do, dr = cts
-    BHG, n, d = q.shape
-    BHKV = k.shape[0]
-    G = BHG // BHKV
-    b = block_size
-    nb = n // b
-
-    from .ref import _gather_blocks
-
-    kx = jnp.broadcast_to(k[:, None], (BHKV, G, n, d)).reshape(BHG, n, d)
-    vx = jnp.broadcast_to(v[:, None], (BHKV, G, n, d)).reshape(BHG, n, d)
-    q_blk = _gather_blocks(q.astype(jnp.float32), x_idx, b)
-    k_blk = _gather_blocks(kx.astype(jnp.float32), y_idx, b)
-    v_blk = _gather_blocks(vx.astype(jnp.float32), y_idx, b)
-    c_sel = jnp.take_along_axis(c, x_idx, axis=1)
-
-    s = jnp.einsum("rmid,rmjd->rmij", q_blk, k_blk) * scale - c_sel[..., None, None]
-    valid = (flags & 1) == 1
-    diag = (flags & 2) == 2
-    tri = jnp.arange(b)[:, None] >= jnp.arange(b)[None, :]
-    mask = jnp.where(diag[..., None, None], tri[None, None], True)
-    mask = jnp.logical_and(mask, valid[..., None, None])
-    a = jnp.where(mask, jnp.exp(jnp.minimum(s, 80.0)), 0.0)
-
-    do_blk = _gather_blocks(do.astype(jnp.float32), x_idx, b)
-    dr_blk = jnp.take_along_axis(
-        dr.reshape(BHG, nb, b).astype(jnp.float32), x_idx[..., None], axis=1
-    )
-    da = jnp.einsum("rmid,rmjd->rmij", do_blk, v_blk) + dr_blk[..., None]
-    ds = a * da
-
-    dq_blk = jnp.einsum("rmij,rmjd->rmid", ds, k_blk) * scale
-    dk_blk = jnp.einsum("rmij,rmid->rmjd", ds, q_blk) * scale
-    dv_blk = jnp.einsum("rmij,rmid->rmjd", a, do_blk)
-    dc_blk = -jnp.sum(ds, axis=(-1, -2))  # (BHG, m)
-
-    seg = jax.vmap(lambda z, i, u: z.at[i].add(u))
-    dq = seg(jnp.zeros((BHG, nb, b, d), jnp.float32), x_idx, dq_blk).reshape(BHG, n, d)
-    dkx = seg(jnp.zeros((BHG, nb, b, d), jnp.float32), y_idx, dk_blk)
-    dvx = seg(jnp.zeros((BHG, nb, b, d), jnp.float32), y_idx, dv_blk)
-    dk = jnp.sum(dkx.reshape(BHKV, G, nb, b, d), axis=1).reshape(BHKV, n, d)
-    dv = jnp.sum(dvx.reshape(BHKV, G, nb, b, d), axis=1).reshape(BHKV, n, d)
-    dc = seg(jnp.zeros((BHG, nb), jnp.float32), x_idx, dc_blk)
-
-    return (
-        dq.astype(q.dtype),
-        dk.astype(k.dtype),
-        dv.astype(v.dtype),
-        dc.astype(c.dtype),
-        _float0(x_idx),
-        _float0(y_idx),
-        _float0(flags),
-    )
-
-
-block_sparse_attention.defvjp(_fwd, _bwd)

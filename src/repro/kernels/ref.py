@@ -1,13 +1,24 @@
-"""Pure-jnp oracle for the block-sparse attention kernel.
+"""Pure-jnp oracle for the block-sparse attention kernels (fwd + bwd).
 
-Computes exactly the kernel's I/O contract (unnormalized numerator + row
-sums over the selected blocks) with plain gathers/einsums. Used by tests to
-validate the Pallas kernel in interpret mode and by the custom_vjp backward.
+Computes exactly the kernels' I/O contract — unnormalized numerator, row
+sums and the per-token stabilizer ``mt``, plus their VJP — with plain
+gathers/einsums. Used by tests to validate the Pallas kernels in interpret
+mode and by the custom_vjp backward as the jnp fallback (DESIGN.md §3).
+
+Stabilizer semantics (shared with the Pallas kernels): mt[token] is the max
+of the floor ``c[query block]`` and every masked score the token sees across
+its selected blocks; weights are exp(s − mt) ≤ 1 so nothing overflows, fwd
+or bwd. mt is gradient-transparent (stop_gradient — it cancels in the
+caller's normalization), hence dc ≡ 0 by contract.
 """
 from __future__ import annotations
 
+from typing import Optional, Tuple
+
 import jax
 import jax.numpy as jnp
+
+from repro.core.mra import NEG_INF  # shared finite "minus infinity" sentinel
 
 
 def _gather_blocks(x: jax.Array, idx: jax.Array, b: int) -> jax.Array:
@@ -17,6 +28,66 @@ def _gather_blocks(x: jax.Array, idx: jax.Array, b: int) -> jax.Array:
     return jnp.take_along_axis(xb, idx[..., None, None], axis=1)
 
 
+def _expand_kv(x: jax.Array, G: int) -> jax.Array:
+    """(BHKV, n, d) -> (BHG, n, d) by repeating each KV head G times."""
+    BHKV, n, d = x.shape
+    return jnp.broadcast_to(x[:, None], (BHKV, G, n, d)).reshape(BHKV * G, n, d)
+
+
+def _block_mask(flags: jax.Array, km_blk: Optional[jax.Array], b: int) -> jax.Array:
+    """(BHG, m) flags (+ optional (BHG, m, b) key-block mask) -> (BHG, m, b, b).
+
+    flags bit0: pair valid; bit1: apply the causal triangular mask (diagonal
+    blocks). ``km_blk`` marks valid *keys* inside each selected key block.
+    """
+    valid = (flags & 1) == 1
+    diag = (flags & 2) == 2
+    tri = jnp.arange(b)[:, None] >= jnp.arange(b)[None, :]
+    mask = jnp.where(diag[..., None, None], tri[None, None], True)
+    mask = jnp.logical_and(mask, valid[..., None, None])
+    if km_blk is not None:
+        mask = jnp.logical_and(mask, (km_blk > 0)[..., None, :])
+    return mask
+
+
+def _recompute(q, k, c, x_idx, y_idx, flags, key_mask, *, scale, block_size):
+    """Shared fwd/bwd recompute: masked scores, per-token stabilizer, weights.
+
+    Returns (a, q_blk, k_blk, mt) with a (BHG, m, b, b) = mask·exp(s − mt),
+    mt (BHG, nb, b) = max(c floor, masked score row max), stop-gradient.
+    """
+    b = block_size
+    BHG, n, _ = q.shape
+    nb = n // b
+    G = BHG // k.shape[0]
+    kx = _expand_kv(k, G)
+    q_blk = _gather_blocks(q.astype(jnp.float32), x_idx, b)
+    k_blk = _gather_blocks(kx.astype(jnp.float32), y_idx, b)
+    s = jnp.einsum("rmid,rmjd->rmij", q_blk, k_blk) * scale
+    km_blk = None
+    if key_mask is not None:
+        kmx = _expand_kv(key_mask[..., None].astype(jnp.float32), G)[..., 0]
+        km_blk = jnp.take_along_axis(
+            kmx.reshape(BHG, nb, b), y_idx[..., None], axis=1
+        )  # (BHG, m, b)
+    mask = _block_mask(flags, km_blk, b)
+
+    # per-token stabilizer: scatter-max of masked block row maxima over the
+    # floor c (the caller's coarse background max)
+    row_max = jnp.max(jnp.where(mask, s, NEG_INF), axis=-1)  # (BHG, m, b)
+    base = jnp.broadcast_to(c[..., None], (BHG, nb, b)).astype(jnp.float32)
+    mt = jax.vmap(lambda z, i, u: z.at[i].max(u))(base, x_idx, row_max)
+    mt = jax.lax.stop_gradient(mt)
+
+    mt_sel = jnp.take_along_axis(mt, x_idx[..., None], axis=1)  # (BHG, m, b)
+    # valid entries satisfy s ≤ mt by construction, so no clamp is needed —
+    # and a clamp would corrupt autodiff with a ½-gradient at the row-max tie.
+    # Masked lanes are sanitized *before* exp (the where-grad 0·inf guard).
+    arg = jnp.where(mask, s - mt_sel[..., None], 0.0)
+    a = jnp.where(mask, jnp.exp(arg), 0.0)
+    return a, q_blk, k_blk, mt
+
+
 def block_sparse_attention_ref(
     q: jax.Array,  # (BHG, n, d)
     k: jax.Array,  # (BHKV, n, d)
@@ -24,33 +95,22 @@ def block_sparse_attention_ref(
     x_idx: jax.Array,  # (BHG, m)
     y_idx: jax.Array,  # (BHG, m)
     flags: jax.Array,  # (BHG, m) bit0 valid, bit1 causal-diag
-    c: jax.Array,  # (BHG, nb)
+    c: jax.Array,  # (BHG, nb) stabilizer floor
+    key_mask: Optional[jax.Array] = None,  # (BHKV, n), >0 = valid key
     *,
     scale: float,
     block_size: int,
 ):
+    """Returns (out (BHG,n,d), rowsum (BHG,n), mt (BHG,n)), all fp32."""
     BHG, n, d = q.shape
-    BHKV = k.shape[0]
-    G = BHG // BHKV
+    G = BHG // k.shape[0]
     b = block_size
     nb = n // b
-    m = x_idx.shape[1]
 
-    kx = jnp.broadcast_to(k[:, None], (BHKV, G, n, d)).reshape(BHG, n, d)
-    vx = jnp.broadcast_to(v[:, None], (BHKV, G, n, d)).reshape(BHG, n, d)
-
-    q_blk = _gather_blocks(q.astype(jnp.float32), x_idx, b)  # (BHG, m, b, d)
-    k_blk = _gather_blocks(kx.astype(jnp.float32), y_idx, b)
-    v_blk = _gather_blocks(vx.astype(jnp.float32), y_idx, b)
-    c_sel = jnp.take_along_axis(c, x_idx, axis=1)  # (BHG, m)
-
-    s = jnp.einsum("rmid,rmjd->rmij", q_blk, k_blk) * scale - c_sel[..., None, None]
-    valid = (flags & 1) == 1
-    diag = (flags & 2) == 2
-    tri = jnp.arange(b)[:, None] >= jnp.arange(b)[None, :]
-    mask = jnp.where(diag[..., None, None], tri[None, None], True)
-    mask = jnp.logical_and(mask, valid[..., None, None])
-    a = jnp.where(mask, jnp.exp(jnp.minimum(s, 80.0)), 0.0)
+    a, _, _, mt = _recompute(
+        q, k, c, x_idx, y_idx, flags, key_mask, scale=scale, block_size=b
+    )
+    v_blk = _gather_blocks(_expand_kv(v, G).astype(jnp.float32), y_idx, b)
 
     o_blk = jnp.einsum("rmij,rmjd->rmid", a, v_blk)
     r_blk = jnp.sum(a, axis=-1)
@@ -58,4 +118,57 @@ def block_sparse_attention_ref(
     seg = jax.vmap(lambda z, i, u: z.at[i].add(u))
     out = seg(jnp.zeros((BHG, nb, b, d), jnp.float32), x_idx, o_blk).reshape(BHG, n, d)
     rowsum = seg(jnp.zeros((BHG, nb, b), jnp.float32), x_idx, r_blk).reshape(BHG, n)
-    return out, rowsum
+    return out, rowsum, mt.reshape(BHG, n)
+
+
+def block_sparse_attention_bwd_ref(
+    q: jax.Array,  # (BHG, n, d)
+    k: jax.Array,  # (BHKV, n, d)
+    v: jax.Array,  # (BHKV, n, d)
+    c: jax.Array,  # (BHG, nb)
+    x_idx: jax.Array,  # (BHG, m)
+    y_idx: jax.Array,  # (BHG, m)
+    flags: jax.Array,  # (BHG, m)
+    key_mask: Optional[jax.Array],  # (BHKV, n) or None
+    do: jax.Array,  # (BHG, n, d) cotangent of the numerator
+    dr: jax.Array,  # (BHG, n) cotangent of the row sums
+    *,
+    scale: float,
+    block_size: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Flash-style recompute backward: (dq, dk, dv), all fp32.
+
+    Per selected pair (x, y):  s = q_x k_y^T·scale,  a = mask·exp(s − mt_x),
+    da = do_x v_y^T + dr_x 1^T,  ds = a ⊙ da, then
+      dq_x += ds k_y·scale,   dk_y += ds^T q_x·scale  (G-group reduced),
+      dv_y += a^T do_x.   dc ≡ 0 (stabilizer is gradient-transparent).
+    """
+    BHG, n, d = q.shape
+    BHKV = k.shape[0]
+    G = BHG // BHKV
+    b = block_size
+    nb = n // b
+
+    a, q_blk, k_blk, _ = _recompute(
+        q, k, c, x_idx, y_idx, flags, key_mask, scale=scale, block_size=b
+    )
+    v_blk = _gather_blocks(_expand_kv(v, G).astype(jnp.float32), y_idx, b)
+
+    do_blk = _gather_blocks(do.astype(jnp.float32), x_idx, b)
+    dr_blk = jnp.take_along_axis(
+        dr.reshape(BHG, nb, b).astype(jnp.float32), x_idx[..., None], axis=1
+    )
+    da = jnp.einsum("rmid,rmjd->rmij", do_blk, v_blk) + dr_blk[..., None]
+    ds = a * da
+
+    dq_blk = jnp.einsum("rmij,rmjd->rmid", ds, k_blk) * scale
+    dk_blk = jnp.einsum("rmij,rmid->rmjd", ds, q_blk) * scale
+    dv_blk = jnp.einsum("rmij,rmid->rmjd", a, do_blk)
+
+    seg = jax.vmap(lambda z, i, u: z.at[i].add(u))
+    dq = seg(jnp.zeros((BHG, nb, b, d), jnp.float32), x_idx, dq_blk).reshape(BHG, n, d)
+    dkx = seg(jnp.zeros((BHG, nb, b, d), jnp.float32), y_idx, dk_blk)
+    dvx = seg(jnp.zeros((BHG, nb, b, d), jnp.float32), y_idx, dv_blk)
+    dk = jnp.sum(dkx.reshape(BHKV, G, nb, b, d), axis=1).reshape(BHKV, n, d)
+    dv = jnp.sum(dvx.reshape(BHKV, G, nb, b, d), axis=1).reshape(BHKV, n, d)
+    return dq, dk, dv

@@ -146,7 +146,7 @@ def attn_block(x, p, cfg: ModelConfig, *, spec: Optional[AttentionSpec] = None,
     B, S, d = x.shape
     if positions is None:
         positions = jnp.arange(S)
-    spec = spec or cfg.attention
+    spec = spec or cfg.attn_spec
     q, k, v = qkv_project(x, p, cfg, positions)
     k, v = expand_kv_slots(k, v, cfg)
     q, k, v = _tp_attn_constraint(cfg, q, k, v)
@@ -163,7 +163,7 @@ def attn_block_decode(x, p, cfg: ModelConfig, k_cache, v_cache, lengths, *,
     The KV cache stores the *real* kv_heads (no slot expansion — decode is
     memory-bound); padded query heads still work since Hq_pad % kv_heads == 0.
     """
-    spec = spec or cfg.attention
+    spec = spec or cfg.attn_spec
     positions = (lengths - 1)[:, None]  # (B,1)
     q, k_new, v_new = qkv_project(x, p, cfg, positions)
     b_idx = jnp.arange(x.shape[0])

@@ -158,11 +158,13 @@ def rglru_block(x, p, cfg: ModelConfig):
 # Full-sequence forward
 # --------------------------------------------------------------------------- #
 def _local_spec(cfg: ModelConfig) -> AttentionSpec:
+    # attn_spec (not attention): honor the model-level kernel routing
     if cfg.attention.kind in ("mra2", "mra2_s"):
-        return cfg.attention
+        return cfg.attn_spec
     import dataclasses
 
-    return dataclasses.replace(cfg.attention, kind="local", local_window=cfg.local_window)
+    return dataclasses.replace(cfg.attn_spec, kind="local",
+                               local_window=cfg.local_window)
 
 
 def forward(params, cfg: ModelConfig, batch, *, key_mask=None):

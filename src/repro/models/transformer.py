@@ -216,7 +216,7 @@ def prefill(params, cfg: ModelConfig, batch, cache):
         q, k, v = L.qkv_project(h, p["attn"], cfg, positions)
         ke, ve = L.expand_kv_slots(k, v, cfg)
         q, ke, ve = L._tp_attn_constraint(cfg, q, ke, ve)
-        o = self_attention(q, ke, ve, cfg.attention, causal=cfg.causal)
+        o = self_attention(q, ke, ve, cfg.attn_spec, causal=cfg.causal)
         if cfg.padded_heads != cfg.num_heads:
             o = o * L.head_mask(cfg)[None, :, None, None].astype(o.dtype)
         x = x + jnp.einsum("bhsk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))
@@ -306,7 +306,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens):
             new_cache["pyr_k"][i] = pk
             new_cache["pyr_v"][i] = pv
             pyramid = PyramidState(pk, pv)
-        o = decode_attention(q, kc, vc, lengths, cfg.attention, pyramid=pyramid,
+        o = decode_attention(q, kc, vc, lengths, cfg.attn_spec, pyramid=pyramid,
                              k_scale=ks, v_scale=vs)
         if cfg.padded_heads != cfg.num_heads:
             o = o * L.head_mask(cfg)[None, :, None, None].astype(o.dtype)

@@ -47,11 +47,25 @@ class TrainConfig:
     grad_compression: str = "none"  # none | bf16_ef
     log_every: int = 10
     straggler_factor: float = 2.0  # steps slower than EWMA*factor are flagged
+    # Kernel-path training: None = keep the model config's routing; True/False
+    # force the fused Pallas fwd+bwd attention kernels on/off for this run.
+    # kernel_interpret runs them in interpret mode (CPU smoke of the TPU path).
+    use_kernel: Optional[bool] = None
+    kernel_interpret: bool = False
+
+
+def _apply_kernel_flags(cfg: ModelConfig, tc: TrainConfig) -> ModelConfig:
+    if tc.use_kernel is None:
+        return cfg
+    return cfg.replace(
+        attn_use_kernel=tc.use_kernel, attn_interpret=tc.kernel_interpret
+    )
 
 
 def make_train_step(cfg: ModelConfig, tc: TrainConfig, optimizer: AdamW,
                     lr_fn: Callable):
     """Build the (jit-able) train_step(params, opt_state, batch) function."""
+    cfg = _apply_kernel_flags(cfg, tc)
     model = get_model(cfg)
 
     def microbatch_grads(params, batch):
@@ -120,6 +134,7 @@ def _batch_shardings(batch, mesh, rules=None):
 def train(cfg: ModelConfig, shape: ShapeCfg, tc: TrainConfig, *, mesh=None,
           rules: Optional[ShardingRules] = None, on_metrics=None):
     """Full driver: init/restore -> loop -> checkpoint. Returns final metrics."""
+    cfg = _apply_kernel_flags(cfg, tc)
     model = get_model(cfg)
     optimizer = AdamW()
     lr_fn = cosine_schedule(tc.lr, tc.warmup, tc.steps)

@@ -1,0 +1,213 @@
+"""Differential-testing harness for the MRA-2 attention kernel stack.
+
+Three independent implementations of the same math are compared pairwise:
+
+  1. the Pallas kernels in interpret mode (fwd + fused bwd, the TPU path),
+  2. the pure-jnp gather/scatter path (``mra2_attention`` without the
+     kernel, and ``kernels/ref.py`` at the op level),
+  3. exact ``full_attention`` — an oracle when the block budget covers the
+     whole grid (MRA-2 at full budget is exact, paper §4).
+
+Gradient trust comes from the same triangle: the fused Pallas backward vs
+the jnp recompute backward vs autodiff through the reference forward, plus
+``jax.test_util.check_grads`` (numerical VJP) on the kernel op itself.
+
+Cases sweep causal × GQA × padding × variant — exactly the axes where a
+data-dependent sparse kernel can silently go wrong (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mra import MraConfig, full_attention, mra2_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffCase:
+    """One point of the differential sweep (model-level, mra2_attention)."""
+
+    causal: bool = False
+    group: int = 1  # GQA: Hq = group * Hkv
+    padded: bool = False  # ragged per-batch key mask (padding traffic)
+    variant: str = "full"  # MRA-2 | MRA-2-s
+    B: int = 2
+    Hkv: int = 2
+    N: int = 56  # deliberately not a multiple of block_size
+    D: int = 12
+    block_size: int = 16
+    blocks_per_row: int = 3
+    seed: int = 0
+
+    @property
+    def Hq(self) -> int:
+        return self.Hkv * self.group
+
+    @property
+    def id(self) -> str:
+        return (
+            f"{'causal' if self.causal else 'bidir'}-g{self.group}"
+            f"-{'padded' if self.padded else 'dense'}-{self.variant}"
+        )
+
+
+# The sweep: every combination of the risky axes. N=56 with block_size=16
+# forces sequence padding inside mra2_attention on top of the key mask.
+SWEEP = [
+    DiffCase(causal=c, group=g, padded=p, variant=v, seed=i)
+    for i, (c, g, p, v) in enumerate(
+        itertools.product([False, True], [1, 2], [False, True], ["full", "sparse"])
+    )
+]
+
+
+def make_inputs(case: DiffCase):
+    """Returns (q, k, v, key_mask) for a case; key_mask is None when dense."""
+    r = np.random.default_rng(case.seed)
+    q = jnp.asarray(r.standard_normal((case.B, case.Hq, case.N, case.D)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((case.B, case.Hkv, case.N, case.D)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((case.B, case.Hkv, case.N, case.D)), jnp.float32)
+    key_mask = None
+    if case.padded:
+        lengths = r.integers(case.N // 2, case.N + 1, case.B)
+        key_mask = jnp.asarray(np.arange(case.N)[None] < lengths[:, None])
+    return q, k, v, key_mask
+
+
+def mra_cfg(case: DiffCase, *, use_kernel: bool = False, kernel_bwd: str = "pallas",
+            blocks_per_row: Optional[int] = None) -> MraConfig:
+    return MraConfig(
+        block_size=case.block_size,
+        blocks_per_row=blocks_per_row or case.blocks_per_row,
+        variant=case.variant,
+        causal=case.causal,
+        use_kernel=use_kernel,
+        kernel_bwd=kernel_bwd,
+        interpret=True,  # CPU validation of the TPU kernels
+    )
+
+
+def valid_rows(case: DiffCase, key_mask) -> jax.Array:
+    """(B, 1, N, 1) mask of query rows whose output is well-defined.
+
+    Rows at padded positions are dead in the sparse paths (zero output) but
+    uniform in the softmax oracle; comparisons exclude them.
+    """
+    if key_mask is None:
+        return jnp.ones((case.B, 1, case.N, 1), jnp.float32)
+    return key_mask[:, None, :, None].astype(jnp.float32)
+
+
+def rel_err(a, b, mask=None) -> float:
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    if mask is not None:
+        a = a * mask
+        b = b * mask
+    return float(jnp.linalg.norm(a - b) / (jnp.linalg.norm(b) + 1e-9))
+
+
+def max_rel_err(a, b) -> float:
+    """max |a-b| / max|b| — the tolerance used for gradient parity."""
+    scale = float(jnp.abs(jnp.asarray(b)).max()) + 1e-6
+    return float(jnp.abs(jnp.asarray(a) - jnp.asarray(b)).max()) / scale
+
+
+def grad_triple(case: DiffCase, loss_of_cfg):
+    """Gradients of the same scalar loss under the three backward routes:
+    (pallas-bwd kernel, jnp-bwd fallback, pure-jnp path autodiff)."""
+    g_pallas = loss_of_cfg(mra_cfg(case, use_kernel=True, kernel_bwd="pallas"))
+    g_jnp = loss_of_cfg(mra_cfg(case, use_kernel=True, kernel_bwd="jnp"))
+    g_ref = loss_of_cfg(mra_cfg(case, use_kernel=False))
+    return g_pallas, g_jnp, g_ref
+
+
+# --------------------------------------------------------------------------- #
+# Op-level cases (block_sparse_attention directly): exercises the kernel
+# contract — flags bits, GQA row mapping, key-block masks, dc cotangent —
+# without MRA's selection logic in the way.
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class OpCase:
+    group: int = 1
+    masked: bool = False
+    causal_diag: bool = False
+    BHKV: int = 2
+    n: int = 64
+    d: int = 16
+    b: int = 16
+    m: int = 7
+    seed: int = 0
+
+    @property
+    def id(self) -> str:
+        return (
+            f"g{self.group}-{'masked' if self.masked else 'dense'}"
+            f"-{'tri' if self.causal_diag else 'notri'}"
+        )
+
+
+OP_SWEEP = [
+    OpCase(group=g, masked=p, causal_diag=c, seed=i)
+    for i, (g, p, c) in enumerate(
+        itertools.product([1, 2], [False, True], [False, True])
+    )
+]
+
+
+def make_op_inputs(case: OpCase):
+    """Returns (q, k, v, c, x_idx, y_idx, flags, key_mask) for the raw op.
+
+    x_idx covers every query block (the kernel contract); y_idx is random;
+    one pair per row is invalid (flags bit0 = 0).
+    """
+    r = np.random.default_rng(case.seed)
+    BHG = case.BHKV * case.group
+    nb = case.n // case.b
+    assert case.m >= nb
+    q = jnp.asarray(r.standard_normal((BHG, case.n, case.d)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((case.BHKV, case.n, case.d)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((case.BHKV, case.n, case.d)), jnp.float32)
+    c = jnp.asarray(r.standard_normal((BHG, nb)), jnp.float32)
+    base = np.tile(np.arange(nb), (BHG, 1))
+    extra = r.integers(0, nb, (BHG, case.m - nb))
+    x_idx = jnp.asarray(np.concatenate([base, extra], 1), jnp.int32)
+    y_idx = jnp.asarray(r.integers(0, nb, (BHG, case.m)), jnp.int32)
+    flags = np.ones((BHG, case.m), np.int32)
+    flags[:, -1] = 0  # one invalid pair per row
+    if case.causal_diag:
+        flags |= 2 * (np.asarray(x_idx) == np.asarray(y_idx)).astype(np.int32)
+    key_mask = None
+    if case.masked:
+        key_mask = jnp.asarray(r.integers(0, 2, (case.BHKV, case.n)), jnp.int32)
+    return q, k, v, c, x_idx, y_idx, jnp.asarray(flags), key_mask
+
+
+def op_loss(fn):
+    """Scalar loss exercising numerator and row sums with asymmetric
+    cotangents, so dq, dk and dv are all nontrivial. (dc ≡ 0 by the kernel
+    contract: the stabilizer is gradient-transparent.)"""
+
+    def loss(q, k, v, c):
+        o, rsum, _ = fn(q, k, v, c)
+        return jnp.sum(o * 0.3) + jnp.sum(jnp.sin(rsum))
+
+    return loss
+
+
+def op_loss_normalized(fn, w):
+    """Stabilizer-invariant loss: sum(w · o / rowsum). Mathematically
+    independent of the per-token stabilizer mt, so the custom VJP's
+    stop-gradient-mt semantics coincide with the true derivative — the loss
+    to use for numerical (finite-difference) gradient checks."""
+
+    def loss(q, k, v, c):
+        o, rsum, _ = fn(q, k, v, c)
+        return jnp.sum(w * o / rsum[..., None])
+
+    return loss

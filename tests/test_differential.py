@@ -1,0 +1,235 @@
+"""Differential tests: Pallas kernels (interpret) vs jnp paths vs oracle.
+
+The test-archetype core of the kernel-training PR (ISSUE 1): every risky
+axis of the data-dependent sparse kernels — causal × GQA × padding ×
+sparse/full — is swept through three independent implementations, forward
+and backward, plus numerical VJP checks. See tests/harness.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.test_util import check_grads
+
+from harness import (
+    OP_SWEEP,
+    SWEEP,
+    grad_triple,
+    make_inputs,
+    make_op_inputs,
+    max_rel_err,
+    mra_cfg,
+    op_loss,
+    op_loss_normalized,
+    rel_err,
+    valid_rows,
+)
+from repro.core.mra import full_attention, mra2_attention
+from repro.kernels.ops import block_sparse_attention
+from repro.kernels.ref import block_sparse_attention_ref
+
+TOL = 1e-3  # acceptance bound: pallas vs jnp ≤ 1e-3 relative (fp32)
+
+
+# --------------------------------------------------------------------------- #
+# Forward: kernel path vs jnp path vs exact oracle
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("case", SWEEP, ids=lambda c: c.id)
+def test_forward_kernel_path_matches_jnp_path(case):
+    q, k, v, km = make_inputs(case)
+    oj = mra2_attention(q, k, v, mra_cfg(case), key_mask=km)
+    ok = jax.jit(
+        lambda a, b, c: mra2_attention(a, b, c, mra_cfg(case, use_kernel=True),
+                                       key_mask=km)
+    )(q, k, v)
+    mask = valid_rows(case, km)
+    assert rel_err(ok, oj, mask) < TOL, case.id
+
+
+@pytest.mark.parametrize("case", SWEEP, ids=lambda c: c.id)
+def test_full_budget_matches_full_attention(case):
+    """At full block budget MRA-2 is exact — both paths must hit the softmax
+    oracle (the strongest cross-implementation anchor)."""
+    q, k, v, km = make_inputs(case)
+    nb = -(-case.N // case.block_size)
+    ref = full_attention(q, k, v, causal=case.causal, key_mask=km)
+    mask = valid_rows(case, km)
+    for use_kernel in (False, True):
+        cfg = mra_cfg(case, use_kernel=use_kernel, blocks_per_row=nb)
+        out = mra2_attention(q, k, v, cfg, key_mask=km)
+        assert rel_err(out, ref, mask) < 2e-3, (case.id, use_kernel)
+
+
+# --------------------------------------------------------------------------- #
+# Backward: fused Pallas bwd vs jnp bwd vs autodiff-through-reference
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("case", OP_SWEEP, ids=lambda c: c.id)
+def test_op_vjp_pallas_vs_jnp_vs_autodiff(case):
+    """Op-level gradient triangle, including the GQA head-grouped dk/dv
+    reductions (group=2 cases) and the dc ≡ 0 stabilizer contract."""
+    q, k, v, c, xi, yi, fl, km = make_op_inputs(case)
+
+    def op(bwd_impl):
+        return op_loss(
+            lambda q, k, v, c: block_sparse_attention(
+                q, k, v, c, xi, yi, fl, km,
+                scale=0.25, block_size=case.b, interpret=True, bwd_impl=bwd_impl,
+            )
+        )
+
+    ref_loss = op_loss(
+        lambda q, k, v, c: block_sparse_attention_ref(
+            q, k, v, xi, yi, fl, c, km, scale=0.25, block_size=case.b
+        )
+    )
+    g_pallas = jax.jit(jax.grad(op("pallas"), argnums=(0, 1, 2, 3)))(q, k, v, c)
+    g_jnp = jax.grad(op("jnp"), argnums=(0, 1, 2, 3))(q, k, v, c)
+    g_auto = jax.grad(ref_loss, argnums=(0, 1, 2, 3))(q, k, v, c)
+    for name, gp, gj, ga in zip("qkvc", g_pallas, g_jnp, g_auto):
+        assert max_rel_err(gp, gj) < TOL, (case.id, f"d{name} pallas vs jnp")
+        assert max_rel_err(gj, ga) < TOL, (case.id, f"d{name} jnp vs autodiff")
+    assert float(jnp.abs(g_pallas[3]).max()) == 0.0  # dc contract
+    assert float(jnp.abs(g_auto[3]).max()) == 0.0  # ref shares the contract
+
+
+@pytest.mark.parametrize("case", [OP_SWEEP[0], OP_SWEEP[5]],
+                         ids=lambda c: c.id)
+def test_op_numerical_vjp(case):
+    """jax.test_util.check_grads: the custom VJP (fused Pallas backward)
+    against numerical differentiation, on a stabilizer-invariant (normalized)
+    loss — where the stop-gradient-mt contract equals the true derivative."""
+    q, k, v, c, xi, yi, fl, km = make_op_inputs(case)
+    w = jnp.asarray(
+        np.random.default_rng(7).standard_normal(q.shape), jnp.float32
+    )
+    f = op_loss_normalized(
+        lambda q, k, v, c: block_sparse_attention(
+            q, k, v, c, xi, yi, fl, km,
+            scale=0.25, block_size=case.b, interpret=True,
+        ),
+        w,
+    )
+    check_grads(f, (q, k, v, c), order=1, modes=["rev"], atol=5e-2, rtol=5e-2)
+
+
+def test_stabilizer_is_gradient_transparent():
+    """The c floor shifts the raw outputs (out, rowsum scale by exp(-mt)) but
+    cancels in the normalized output — so dc ≡ 0 is the *correct* gradient
+    for every consumer of the normalized result, not an approximation."""
+    case = OP_SWEEP[0]
+    q, k, v, c, xi, yi, fl, km = make_op_inputs(case)
+
+    def normalized(c):
+        o, r, _ = block_sparse_attention(
+            q, k, v, c, xi, yi, fl, km,
+            scale=0.25, block_size=case.b, interpret=True,
+        )
+        return o / r[..., None]
+
+    # raising the floor far above every score changes out/rowsum but must
+    # leave the normalized output (and hence downstream losses) unchanged
+    np.testing.assert_allclose(
+        np.asarray(normalized(c)), np.asarray(normalized(c + 5.0)),
+        atol=1e-5, rtol=1e-5,
+    )
+    for impl in ("pallas", "jnp"):
+        dc = jax.grad(
+            lambda c: op_loss(
+                lambda q, k, v, c: block_sparse_attention(
+                    q, k, v, c, xi, yi, fl, km,
+                    scale=0.25, block_size=case.b, interpret=True, bwd_impl=impl,
+                )
+            )(q, k, v, c)
+        )(c)
+        assert float(jnp.abs(dc).max()) == 0.0, impl
+
+
+@pytest.mark.parametrize("case", [c for c in SWEEP if c.group == 2],
+                         ids=lambda c: c.id)
+def test_grad_parity_through_mra(case):
+    """End-to-end gradient triangle through mra2_attention (selection, the
+    coarse background, normalization — everything the training loss sees).
+
+    Restricted to the GQA (group=2) half of the sweep: G=1 is a strict
+    special case of the backward's per-KV-head pair flattening, and the
+    op-level VJP sweep above already covers it.
+    """
+    q, k, v, km = make_inputs(case)
+
+    def loss_grads(cfg):
+        def loss(q, k, v):
+            out = mra2_attention(q, k, v, cfg, key_mask=km)
+            return jnp.sum(jnp.tanh(out))
+
+        return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+    g_pallas, g_jnp, g_ref = grad_triple(case, loss_grads)
+    for name, gp, gj, gr in zip("qkv", g_pallas, g_jnp, g_ref):
+        # the two kernel-path backwards implement identical math
+        assert max_rel_err(gp, gj) < TOL, (case.id, f"d{name} pallas vs jnp")
+        # kernel path vs pure-jnp path differ only by the stabilizer choice
+        assert max_rel_err(gp, gr) < 5e-3, (case.id, f"d{name} kernel vs ref")
+
+
+def test_gqa_group_reduction_matches_expanded_kv():
+    """dk/dv under GQA == gradients with KV heads explicitly expanded and the
+    group axis summed — pins down the fused G-way reduction in the dkv pass."""
+    case = OP_SWEEP[6]  # group=2, masked
+    assert case.group == 2 and case.masked
+    q, k, v, c, xi, yi, fl, km = make_op_inputs(case)
+    G = case.group
+
+    loss = op_loss(
+        lambda q, k, v, c: block_sparse_attention(
+            q, k, v, c, xi, yi, fl, km,
+            scale=0.25, block_size=case.b, interpret=True,
+        )
+    )
+    _, gk, gv, _ = jax.grad(loss, argnums=(0, 1, 2, 3))(q, k, v, c)
+
+    # expanded formulation: each query head owns a private KV copy
+    kx = jnp.repeat(k, G, axis=0)
+    vx = jnp.repeat(v, G, axis=0)
+    kmx = jnp.repeat(km, G, axis=0)
+    loss_x = op_loss(
+        lambda q, kx, vx, c: block_sparse_attention(
+            q, kx, vx, c, xi, yi, fl, kmx,
+            scale=0.25, block_size=case.b, interpret=True,
+        )
+    )
+    _, gkx, gvx, _ = jax.grad(loss_x, argnums=(0, 1, 2, 3))(q, kx, vx, c)
+    BHKV, n, d = k.shape
+    np.testing.assert_allclose(
+        np.asarray(gk), np.asarray(gkx.reshape(BHKV, G, n, d).sum(1)),
+        atol=1e-4, rtol=1e-4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(gv), np.asarray(gvx.reshape(BHKV, G, n, d).sum(1)),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+@pytest.mark.slow
+def test_training_step_on_kernel_path():
+    """One real train step with the fused kernels on (interpret): the
+    kernel-path training flag end-to-end through models/train."""
+    from repro.configs import get_smoke_config
+    from repro.configs.base import ShapeCfg
+    from repro.data import make_batch
+    from repro.models import get_model, init_params
+    from repro.optim import AdamW, cosine_schedule
+    from repro.train import TrainConfig, make_train_step
+
+    cfg = get_smoke_config("qwen2-7b")
+    assert cfg.attention.kind in ("mra2", "mra2_s")
+    tc = TrainConfig(steps=1, use_kernel=True, kernel_interpret=True)
+    opt = AdamW()
+    step = make_train_step(cfg, tc, opt, cosine_schedule(1e-3, 1, 2))
+    model = get_model(cfg)
+    params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v)
+             for k, v in make_batch(cfg, ShapeCfg("t", 64, 2, "train")).items()}
+    params, opt_state, metrics = step(params, opt.init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0

@@ -11,6 +11,18 @@ from repro.models import count_params, get_model, init_params
 
 SMOKE_SHAPE = ShapeCfg("smoke", 64, 2, "train")
 
+# jit-heavy architectures (10-20s per compile even at smoke size) live in the
+# slow tier; the fast tier keeps one representative per family (dense: qwen2/
+# qwen3/llama/yi, moe: granite, vlm: internvl).
+_SLOW_ARCHS = {"kimi-k2-1t-a32b", "recurrentgemma-9b", "rwkv6-7b", "hubert-xlarge"}
+
+
+def _arch_params(archs):
+    return [
+        pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS else a
+        for a in archs
+    ]
+
 
 def _params_and_batch(arch, **overrides):
     cfg = get_smoke_config(arch, **overrides)
@@ -20,7 +32,7 @@ def _params_and_batch(arch, **overrides):
     return cfg, model, params, batch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params(ARCHS))
 def test_forward_and_grad(arch):
     cfg, model, params, batch = _params_and_batch(arch)
     (loss, metrics), grads = jax.value_and_grad(
@@ -35,8 +47,8 @@ def test_forward_and_grad(arch):
     assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
 
 
-@pytest.mark.parametrize("arch", ["qwen2-7b", "kimi-k2-1t-a32b", "rwkv6-7b",
-                                  "recurrentgemma-9b"])
+@pytest.mark.parametrize("arch", _arch_params(["qwen2-7b", "kimi-k2-1t-a32b",
+                                               "rwkv6-7b", "recurrentgemma-9b"]))
 def test_scan_layers_matches_unrolled_loss(arch):
     cfg_u = get_smoke_config(arch)
     model = get_model(cfg_u)
@@ -69,7 +81,7 @@ def test_scan_layers_exact_equivalence_with_stacked_weights():
 _DECODERS = [a for a in ARCHS if a != "hubert-xlarge"]
 
 
-@pytest.mark.parametrize("arch", _DECODERS)
+@pytest.mark.parametrize("arch", _arch_params(_DECODERS))
 def test_decode_step_runs(arch):
     cfg, model, params, batch = _params_and_batch(arch)
     B = 2
@@ -85,7 +97,8 @@ def test_decode_step_runs(arch):
     assert int(cache["lengths"][0]) == 2
 
 
-@pytest.mark.parametrize("arch", ["qwen3-1.7b", "rwkv6-7b", "recurrentgemma-9b"])
+@pytest.mark.parametrize("arch", _arch_params(["qwen3-1.7b", "rwkv6-7b",
+                                               "recurrentgemma-9b"]))
 def test_prefill_matches_stepwise_decode(arch):
     """Prefilling a prompt == feeding it token-by-token through decode_step."""
     cfg, model, params, _ = _params_and_batch(arch)

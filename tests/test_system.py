@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeCfg
@@ -14,6 +15,7 @@ from repro.train import TrainConfig, train
 SHAPE = ShapeCfg("sys", 64, 4, "train")
 
 
+@pytest.mark.slow
 def test_train_checkpoint_restart_serve_end_to_end(tmp_path):
     cfg = get_smoke_config("qwen3-1.7b")  # MRA-2 attention by default
     assert cfg.attention.kind == "mra2"

@@ -31,6 +31,7 @@ def test_train_step_decreases_loss():
     assert losses[-1] < losses[0] - 0.1, losses
 
 
+@pytest.mark.slow
 def test_microbatch_accumulation_matches_fullbatch():
     cfg = get_smoke_config("qwen3-1.7b")
     model = get_model(cfg)
@@ -51,6 +52,7 @@ def test_microbatch_accumulation_matches_fullbatch():
     assert max(jax.tree.leaves(diffs)) < 5e-3
 
 
+@pytest.mark.slow
 def test_grad_compression_close_to_exact():
     cfg = get_smoke_config("qwen3-1.7b")
     opt = AdamW(weight_decay=0.0)
@@ -67,6 +69,7 @@ def test_grad_compression_close_to_exact():
         m_ref["grad_norm"]) + 1e-3
 
 
+@pytest.mark.slow
 def test_train_driver_checkpoint_restart(tmp_path):
     cfg = get_smoke_config("qwen3-1.7b")
     tc1 = TrainConfig(steps=4, lr=1e-3, warmup=1, ckpt_dir=str(tmp_path), ckpt_every=2,
