@@ -8,8 +8,6 @@ entry budget reaches a comparable error band on structured attention.
 from __future__ import annotations
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
 from repro.core.attention import AttentionSpec, self_attention
 from repro.core.mra import MraConfig, full_attention, mra2_attention

@@ -3,14 +3,23 @@
 Per decoded token, MRA decode reads O(S/b + m*b) of the KV cache instead of
 O(S). This benchmark sweeps the exact-block budget m and reports the
 attention-output error vs exact decode, plus host wall-time.
+
+Mesh-aware: under an active mesh (``benchmarks/run.py --mesh DxM``, or this
+module's own ``--mesh`` flag when run standalone) the query/cache tensors
+are placed batch-over-data / kv-heads-over-model and the attention runs
+through the shard_map TP decode path (distributed/shard_attn.py).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mra import MraConfig
-from repro.core.mra_decode import full_decode_attention, mra2_decode_attention
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.attention import AttentionSpec, decode_attention
+from repro.distributed import mesh_utils
+from repro.distributed.shard_attn import attention_partition
 
 from .common import structured_qkv, time_call
 
@@ -21,14 +30,57 @@ def run(emit):
     _, k, v = structured_qkv(rng, B=B, H=Hkv, N=S, D=D)
     q = jnp.asarray(rng.standard_normal((B, Hq, 1, D)), jnp.float32)
     lengths = jnp.full((B,), S, jnp.int32)
-    ref = full_decode_attention(q, k, v, lengths)
-    cfg = MraConfig(block_size=b)
+
+    mesh = mesh_utils.get_mesh()
+    shard = mesh is not None
+    if shard:
+        # place operands with the exact partition the shard_map in_specs will
+        # use (distributed/shard_attn.py) — any other rule means a reshard on
+        # entry and the benchmark would time data movement, not attention.
+        parts = attention_partition(mesh, B, Hkv)
+        if parts is not None:
+            bpart, hpart = parts
+            s4 = NamedSharding(mesh, P(bpart, hpart, None, None))
+            q = jax.device_put(q, s4)
+            k = jax.device_put(k, s4)
+            v = jax.device_put(v, s4)
+            lengths = jax.device_put(lengths, NamedSharding(mesh, P(bpart)))
+
+    full_spec = AttentionSpec(kind="full", shard=shard)
+    ref = decode_attention(q, k, v, lengths, full_spec)
     for m in (4, 16, 64):
-        out = mra2_decode_attention(q, k, v, lengths, cfg, decode_blocks=m)
+        spec = AttentionSpec(kind="mra2", block_size=b, decode_blocks=m,
+                             shard=shard)
+        out = decode_attention(q, k, v, lengths, spec)
         err = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
         us = time_call(
-            lambda q, k, v: mra2_decode_attention(q, k, v, lengths, cfg, decode_blocks=m),
-            q, k, v)
+            lambda q, k, v: decode_attention(q, k, v, lengths, spec), q, k, v)
         emit(f"mra_decode_s4096_m{m}", us, f"{err:.4f}")
-    us = time_call(lambda q, k, v: full_decode_attention(q, k, v, lengths), q, k, v)
+    us = time_call(
+        lambda q, k, v: decode_attention(q, k, v, lengths, full_spec), q, k, v)
     emit("full_decode_s4096", us, "0.0000")
+
+
+def main() -> None:
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="1",
+                    help="device mesh 'D' or 'DxM' (default: 1 = no mesh)")
+    args = ap.parse_args()
+
+    from repro.launch.mesh import parse_mesh
+
+    print("name,us_per_call,derived")
+
+    def emit(name, us, derived):
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    with mesh_utils.use_mesh(parse_mesh(args.mesh)):
+        run(emit)
+
+
+if __name__ == "__main__":
+    main()

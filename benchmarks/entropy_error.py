@@ -10,7 +10,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.attention import AttentionSpec, self_attention
-from repro.core.mra import MraConfig, full_attention, mra2_attention
+from repro.core.mra import MraConfig, mra2_attention
 
 from .common import rel_error, structured_qkv
 

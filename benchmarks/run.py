@@ -1,7 +1,8 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the table's metric:
-relative error, NLL, scaling exponent, or a boolean claim check).
+relative error, NLL, scaling exponent, or a boolean claim check), and can
+mirror them to a JSON file (``--json``) for the CI perf-trajectory artifact.
 
   approx_error  -> paper Fig. 1 + Fig. 4 / Tab. 7 (error vs budget/method)
   entropy_error -> paper Fig. 5 (error vs softmax entropy)
@@ -9,15 +10,29 @@ relative error, NLL, scaling exponent, or a boolean claim check).
   swap_eval     -> paper Tab. 1/2 (drop-in compatibility with trained weights)
   decode_bench  -> beyond-paper MRA decode (KV-block selection)
   kernel_bench  -> fwd+bwd Pallas-kernel vs jnp path timing + grad parity
+
+``--mesh DxM`` (default "1": no mesh) activates a (data, model) device mesh
+for the run: modules read it via ``mesh_utils.get_mesh()`` and place/shard
+their inputs accordingly (decode_bench drives the shard_map TP decode path).
+Use ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to validate
+sharded runs on a CPU host.
 """
 import argparse
+import json
 import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated module subset")
+    ap.add_argument("--mesh", default="1",
+                    help="device mesh 'D' or 'DxM' (default: 1 = no mesh)")
+    ap.add_argument("--json", default=None,
+                    help="also write results to this JSON file (CI artifact)")
     args = ap.parse_args()
+
+    from repro.distributed import mesh_utils
+    from repro.launch.mesh import parse_mesh
 
     from . import (approx_error, decode_bench, entropy_error, kernel_bench,
                    scaling, swap_eval)
@@ -31,15 +46,25 @@ def main() -> None:
         "kernel_bench": kernel_bench,
     }
     chosen = args.only.split(",") if args.only else list(modules)
+    mesh = parse_mesh(args.mesh)
 
     print("name,us_per_call,derived")
+    rows = []
 
     def emit(name, us, derived):
         print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()
+        rows.append({"name": name, "us_per_call": us, "derived": str(derived)})
 
-    for name in chosen:
-        modules[name].run(emit)
+    with mesh_utils.use_mesh(mesh):
+        for name in chosen:
+            modules[name].run(emit)
+
+    if args.json:
+        meta = {"mesh": args.mesh, "modules": chosen}
+        with open(args.json, "w") as f:
+            json.dump({"meta": meta, "rows": rows}, f, indent=2)
+        print(f"[bench] wrote {len(rows)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

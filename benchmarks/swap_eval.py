@@ -8,11 +8,9 @@ with a small LM trained from scratch on the synthetic corpus.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeCfg

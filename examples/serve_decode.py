@@ -14,7 +14,6 @@ import numpy as np
 
 from repro.checkpoint import latest_step, restore
 from repro.configs import get_smoke_config
-from repro.core.attention import AttentionSpec
 from repro.models import get_model, init_params
 from repro.serve import Engine, Request
 
@@ -24,13 +23,19 @@ def main():
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--mesh", default="1",
+                    help="device mesh 'D' or 'DxM' (data x model; default 1 = "
+                         "single device; TP decode via shard_map)")
     args = ap.parse_args()
+    from repro.launch.mesh import parse_mesh
+    mesh = parse_mesh(args.mesh)
 
     outs = {}
     for kind in ("mra2", "full"):
         cfg = get_smoke_config(args.arch)
         cfg = cfg.replace(attention=dataclasses.replace(
-            cfg.attention, kind=kind, decode_blocks=2))
+            cfg.attention, kind=kind, decode_blocks=2),
+            attn_shard=mesh is not None)
         model = get_model(cfg)
         params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
         if args.ckpt_dir:
@@ -38,7 +43,7 @@ def main():
             if step is not None:
                 params = restore(args.ckpt_dir, step, params)
                 print(f"restored checkpoint step {step}")
-        eng = Engine(cfg, params, slots=4, max_len=128)
+        eng = Engine(cfg, params, slots=4, max_len=128, mesh=mesh)
         rng = np.random.default_rng(0)
         reqs = [Request(prompt=rng.integers(1, cfg.vocab, size=ln),
                         max_new_tokens=args.new_tokens)

@@ -8,7 +8,6 @@ real hardware.
     PYTHONPATH=src python examples/train_lm.py --steps 200
 """
 import argparse
-import dataclasses
 
 import jax
 
@@ -47,8 +46,13 @@ def main():
                     help="route MRA attention through the fused Pallas "
                          "fwd+bwd kernels (interpret mode off-TPU)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--mesh", default="1",
+                    help="device mesh 'D' or 'DxM' (data x model; default 1 = "
+                         "single device; attention shards via shard_map)")
     args = ap.parse_args()
     interpret = jax.devices()[0].platform != "tpu"
+    from repro.launch.mesh import parse_mesh
+    mesh = parse_mesh(args.mesh)
 
     p = PRESETS[args.preset]
     shape = ShapeCfg("train", p["seq"], p["batch"], "train")
@@ -58,10 +62,12 @@ def main():
         tc = TrainConfig(steps=args.steps, lr=1e-3, warmup=20, log_every=20,
                          ckpt_dir=args.ckpt_dir and f"{args.ckpt_dir}/{kind}",
                          use_kernel=args.use_kernel or None,
-                         kernel_interpret=args.use_kernel and interpret)
+                         kernel_interpret=args.use_kernel and interpret,
+                         shard_attention=True if mesh is not None else None)
         hist = []
         print(f"=== training with attention={kind} ===")
-        train(cfg, shape, tc, on_metrics=lambda s, m: hist.append(m["loss"]))
+        train(cfg, shape, tc, mesh=mesh,
+              on_metrics=lambda s, m: hist.append(m["loss"]))
         curves[kind] = hist
 
     print("\nfinal losses:")

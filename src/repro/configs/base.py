@@ -49,6 +49,11 @@ class ModelConfig:
     attn_use_kernel: bool = False
     attn_interpret: bool = False
     attn_kernel_bwd: str = "pallas"
+    # Mesh-sharded attention: run every attention layer inside a shard_map
+    # over the active mesh (batch -> data axes, kv-heads -> model axis).
+    # Required for the Pallas kernel path on a mesh (XLA cannot partition
+    # through a pallas_call); a no-op without an active mesh (DESIGN.md §8).
+    attn_shard: bool = False
     # hybrid (recurrentgemma): repeating block pattern
     block_pattern: Tuple[str, ...] = ()  # e.g. ("rglru", "rglru", "local")
     local_window: int = 2048
@@ -90,15 +95,18 @@ class ModelConfig:
 
     @property
     def attn_spec(self) -> AttentionSpec:
-        """cfg.attention with the model-level kernel routing applied."""
-        if not self.attn_use_kernel:
-            return self.attention
-        return dataclasses.replace(
-            self.attention,
-            use_kernel=True,
-            interpret=self.attn_interpret,
-            kernel_bwd=self.attn_kernel_bwd,
-        )
+        """cfg.attention with the model-level kernel/mesh routing applied."""
+        spec = self.attention
+        if self.attn_use_kernel:
+            spec = dataclasses.replace(
+                spec,
+                use_kernel=True,
+                interpret=self.attn_interpret,
+                kernel_bwd=self.attn_kernel_bwd,
+            )
+        if self.attn_shard:
+            spec = dataclasses.replace(spec, shard=True)
+        return spec
 
     @property
     def padded_vocab(self) -> int:

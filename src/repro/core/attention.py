@@ -26,6 +26,10 @@ class AttentionSpec:
     block_size / blocks_per_row: MRA-2 parameters (paper defaults 32 / 4-16).
     decode_blocks: MRA decode-time budget (exact KV blocks per new token).
     local_window: window for kind=="local" (RecurrentGemma local attention).
+    shard: run attention inside a shard_map over the active mesh (batch ->
+      data axes, kv-heads -> model axis); falls back to the bit-identical
+      local path when no mesh is active or shapes don't divide
+      (distributed/shard_attn.py, DESIGN.md §8).
     """
 
     kind: str = "full"
@@ -37,6 +41,7 @@ class AttentionSpec:
     use_kernel: bool = False
     kernel_bwd: str = "pallas"  # bwd impl on the kernel path: pallas | jnp
     interpret: bool = False
+    shard: bool = False
     # beyond-paper (§Perf Y3): int8 KV cache with per-token-per-head scales —
     # halves decode memory footprint and HBM traffic; MRA decode dequantizes
     # only the gathered blocks. Only honored by the mra2/mra2_s decode path.
@@ -68,6 +73,13 @@ def self_attention(
     key_mask: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Sequence self-attention (training / prefill). q (B,Hq,N,D), k/v (B,Hkv,N,D)."""
+    if spec.shard:
+        from repro.distributed.shard_attn import sharded_self_attention
+
+        out = sharded_self_attention(q, k, v, spec, causal=causal,
+                                     key_mask=key_mask)
+        if out is not None:
+            return out
     if spec.kind in ("mra2", "mra2_s"):
         return mra2_attention(q, k, v, spec.mra_config(causal), key_mask=key_mask)
     if spec.kind == "full":
@@ -100,6 +112,15 @@ def decode_attention(
     v_scale=None,
 ) -> jax.Array:
     """Single-token decode attention against a KV cache."""
+    if spec.shard:
+        from repro.distributed.shard_attn import sharded_decode_attention
+
+        out = sharded_decode_attention(
+            q, k_cache, v_cache, lengths, spec, pyramid=pyramid,
+            k_scale=k_scale, v_scale=v_scale,
+        )
+        if out is not None:
+            return out
     if spec.kind in ("mra2", "mra2_s"):
         cfg = spec.mra_config(causal=True)
         return mra2_decode_attention(

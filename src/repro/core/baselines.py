@@ -15,7 +15,6 @@ special case of the MRA frame, paper §2.1).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -25,7 +25,6 @@ and optional key padding masks.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax

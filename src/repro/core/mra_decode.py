@@ -14,7 +14,6 @@ coarse scores O(1) to update per appended token instead of O(S) to recompute.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple, Optional
 
 import jax

@@ -16,8 +16,6 @@ import queue
 import threading
 from typing import Iterator, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeCfg

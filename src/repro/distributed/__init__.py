@@ -4,3 +4,4 @@ from .sharding import (
     logical_to_pspec,
     named_sharding,
 )
+from .shard_attn import sharded_decode_attention, sharded_self_attention

@@ -1,0 +1,146 @@
+"""shard_map wrappers running attention (incl. the Pallas kernels) per-shard.
+
+Under ``jit`` auto-partitioning XLA cannot see inside a ``pallas_call``, so
+the block-sparse kernel would be resolved by gathering its operands onto
+every device. MRA-2 attention is *embarrassingly parallel* over (batch,
+kv-head): the pyramid, the top-k block selection, and the block-sparse
+kernel all act independently per (b, h) slice, and the sequence axis stays
+unsharded — so the correct mesh mapping is a ``shard_map`` over
+
+  * batch  -> the data axes ("pod", "data"), and
+  * heads  -> the model axis ("model"), kv-head aligned (query heads move
+    with their GQA group: q is laid out group-major, Hq = Hkv * G, so
+    splitting Hkv over |model| splits Hq into the matching contiguous
+    chunks).
+
+Inside the region every path (jnp, Pallas fwd + custom_vjp bwd) runs its
+ordinary single-device code on the local shard; no collectives are needed in
+the forward, and the backward's grad all-reduce over the batch axes is the
+``shard_map`` transpose of the batch in_specs (a psum placed by JAX, not by
+us — see DESIGN.md §8).
+
+Dispatch contract: callers (core/attention.py) route here when
+``AttentionSpec.shard`` is set; these functions return ``None`` when no mesh
+is active or when the shapes do not divide the mesh axes, and the caller
+falls through to the bit-identical single-device path. Divisibility
+fallback mirrors distributed/sharding.py: an axis that does not divide is
+replicated, never an error.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from jax.sharding import PartitionSpec as P
+
+from . import mesh_utils
+
+# attention kinds whose per-(batch, kv-head) slices are independent; the
+# baselines (never on the production path) are excluded.
+SHARDABLE_KINDS = ("full", "mra2", "mra2_s", "local")
+
+
+def _batch_axes(mesh, batch: int):
+    """Data axes that divide ``batch`` (greedy, widest first), possibly ()."""
+    dp = mesh_utils.dp_axes(mesh)
+    while dp and batch % math.prod(mesh.shape[a] for a in dp) != 0:
+        dp = dp[1:]
+    return dp
+
+
+def _head_axis(mesh, kv_heads: int) -> Optional[str]:
+    """"model" when the kv-head axis divides it (GQA stays aligned), else None."""
+    if not mesh_utils.has_axis(mesh, "model") or mesh.shape["model"] == 1:
+        return None
+    return "model" if kv_heads % mesh.shape["model"] == 0 else None
+
+
+def attention_partition(mesh, batch: int, kv_heads: int):
+    """(batch_part, head_part) PartitionSpec entries, or None if unshardable.
+
+    Public so callers that pre-place operands (benchmarks, engines) use the
+    *same* decision as the shard_map in_specs — a tensor placed by a
+    different rule would be resharded on entry.
+    """
+    dp = _batch_axes(mesh, batch)
+    hax = _head_axis(mesh, kv_heads)
+    if not dp and hax is None:
+        return None
+    return (dp if dp else None), hax
+
+
+def sharded_self_attention(q, k, v, spec, *, causal, key_mask=None):
+    """shard_map'd full-sequence attention; None if the mesh can't shard it."""
+    mesh = mesh_utils.get_mesh()
+    if mesh is None or spec.kind not in SHARDABLE_KINDS:
+        return None
+    parts = attention_partition(mesh, q.shape[0], k.shape[1])
+    if parts is None:
+        return None
+    bpart, hpart = parts
+    s4 = P(bpart, hpart, None, None)
+    local_spec = spec.replace(shard=False)
+
+    args = {"q": q, "k": k, "v": v}
+    in_specs = {"q": s4, "k": s4, "v": s4}
+    if key_mask is not None:
+        args["km"] = key_mask
+        in_specs["km"] = P(bpart, None)
+
+    def body(a):
+        from repro.core.attention import self_attention
+
+        return self_attention(
+            a["q"], a["k"], a["v"], local_spec, causal=causal,
+            key_mask=a.get("km"),
+        )
+
+    return mesh_utils.shard_map(
+        body, mesh, in_specs=(in_specs,), out_specs=s4, check_rep=False
+    )(args)
+
+
+def sharded_decode_attention(
+    q, k_cache, v_cache, lengths, spec, *, pyramid=None, k_scale=None,
+    v_scale=None
+):
+    """shard_map'd single-token decode attention (TP serving path).
+
+    The KV cache, the pyramid block sums, and the int8 dequant scales all
+    carry (batch, kv_heads, ...) leading axes, so one (batch -> data,
+    kv_heads -> model) mapping covers the whole decode state; ``lengths``
+    shards over batch only. Returns None when the mesh can't shard it.
+    """
+    mesh = mesh_utils.get_mesh()
+    if mesh is None or spec.kind not in SHARDABLE_KINDS:
+        return None
+    parts = attention_partition(mesh, q.shape[0], k_cache.shape[1])
+    if parts is None:
+        return None
+    bpart, hpart = parts
+    s4 = P(bpart, hpart, None, None)
+    s3 = P(bpart, hpart, None)
+    local_spec = spec.replace(shard=False)
+
+    args = {"q": q, "k": k_cache, "v": v_cache, "len": lengths}
+    in_specs = {"q": s4, "k": s4, "v": s4, "len": P(bpart)}
+    if pyramid is not None:
+        args["pk"], args["pv"] = pyramid.k_sum, pyramid.v_sum
+        in_specs["pk"] = in_specs["pv"] = s4
+    if k_scale is not None:
+        args["ks"], args["vs"] = k_scale, v_scale
+        in_specs["ks"] = in_specs["vs"] = s3
+
+    def body(a):
+        from repro.core.attention import decode_attention
+        from repro.core.mra_decode import PyramidState
+
+        pyr = PyramidState(a["pk"], a["pv"]) if "pk" in a else None
+        return decode_attention(
+            a["q"], a["k"], a["v"], a["len"], local_spec, pyramid=pyr,
+            k_scale=a.get("ks"), v_scale=a.get("vs"),
+        )
+
+    return mesh_utils.shard_map(
+        body, mesh, in_specs=(in_specs,), out_specs=s4, check_rep=False
+    )(args)

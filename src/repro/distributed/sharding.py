@@ -17,7 +17,6 @@ import dataclasses
 import math
 from typing import Optional, Sequence, Tuple
 
-import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # candidate mesh-axis groups in preference order, per logical axis

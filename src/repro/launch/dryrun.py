@@ -18,7 +18,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, get_config, shape_skips
 from repro.distributed import mesh_utils
@@ -224,7 +223,6 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, do_compile: bool 
             sub = {}
             for mult in (1, 2):
                 cfg_small = cfg.replace(num_layers=period * mult, scan_layers=False)
-                small_model = get_model(cfg_small)
                 step_small = make_train_step(
                     cfg_small, TrainConfig(microbatches=1), AdamW(),
                     cosine_schedule(1e-4, 10, 1000),

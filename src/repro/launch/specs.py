@@ -6,12 +6,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ModelConfig, ShapeCfg
 from repro.distributed.sharding import ShardingRules, logical_to_pspec
 from repro.models import abstract_params, get_model
-from repro.models.params import ParamSpec
 
 
 def _sds(shape, dtype, mesh, axes, rules):

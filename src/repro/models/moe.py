@@ -19,8 +19,6 @@ axis (granite's 40) fall back to per-expert d_ff tensor parallelism.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +32,6 @@ from .params import ParamSpec
 def moe_specs(cfg: ModelConfig):
     m = cfg.moe
     d, E, f = cfg.d_model, m.num_experts, m.d_ff_expert
-    ep_ok = True  # resolved against the mesh at runtime; specs carry both axes
     return {
         "router": ParamSpec((d, E), ("d_model", None), dtype=cfg.pdt, scale=0.02),
         "wi": ParamSpec((E, d, f), ("experts", "d_model", "expert_ff"), dtype=cfg.pdt),
@@ -164,7 +161,7 @@ def moe_block(x, p, cfg: ModelConfig):
             out, aux = local(xl, wr, wi, wg, wo, e0=0, e_local=E)
             return _finish(out, aux)
 
-        return jax.shard_map(
+        return mesh_utils.shard_map(
             tp_body,
             mesh=mesh,
             in_specs=(P(bspec, None, None), P(), P(None, None, "model"),
@@ -199,7 +196,7 @@ def moe_block(x, p, cfg: ModelConfig):
                 aux = jax.tree.map(lambda a: jax.lax.pmean(a, ("model",)), aux)
             return out.reshape(xl.shape), aux
 
-        return jax.shard_map(
+        return mesh_utils.shard_map(
             a2a_body,
             mesh=mesh,
             in_specs=(P(bspec, "model", None), P(), P("model", None, None),
@@ -214,7 +211,7 @@ def moe_block(x, p, cfg: ModelConfig):
         out, aux = local(xl, wr, wi, wg, wo, e0=e0, e_local=e_local)
         return _finish(out, aux)
 
-    return jax.shard_map(
+    return mesh_utils.shard_map(
         ep_body,
         mesh=mesh,
         in_specs=(P(bspec, None, None), P(), P("model", None, None),

@@ -16,7 +16,6 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.distributed.sharding import ShardingRules, named_sharding
 

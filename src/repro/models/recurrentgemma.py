@@ -17,7 +17,6 @@ MRA applies to the local-attention layers only (DESIGN.md §5): set
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -238,7 +237,6 @@ def _ring_decode_attn(q, kc, vc, pos_c, pos_now, cfg: ModelConfig):
     q (B,H,1,hd); kc/vc (B,1,W,hd); pos_c (B,W) absolute positions (-1 empty).
     """
     B, Hq = q.shape[:2]
-    W = kc.shape[2]
     scale = 1.0 / (cfg.hd ** 0.5)
     qg = q.reshape(B, 1, Hq, cfg.hd).astype(jnp.float32)
     s = jnp.einsum("bkhd,bkjd->bhj", qg, kc.astype(jnp.float32)) * scale
@@ -256,7 +254,6 @@ def decode_step(params, cfg: ModelConfig, cache, tokens):
     lengths = cache["lengths"] + 1
     pos_now = lengths - 1  # (B,)
     x = L.embed(tokens[:, None], params["embed"], cfg)  # (B,1,d)
-    kinds = _pattern(cfg)
     new_cache = dict(cache)
     b_idx = jnp.arange(B)
     ia = ir = 0
@@ -310,7 +307,6 @@ def prefill(params, cfg: ModelConfig, batch, cache):
     tokens = batch["tokens"]
     B, S = tokens.shape
     x = L.embed(tokens, params["embed"], cfg)
-    kinds = _pattern(cfg)
     new_cache = dict(cache)
     ia = ir = 0
     W = cache["k"].shape[3]

@@ -18,8 +18,6 @@ MRA is *inapplicable* here (no attention matrix) — DESIGN.md §5.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

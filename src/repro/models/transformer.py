@@ -19,7 +19,6 @@ Batch formats (built by repro.data / launch.input_specs):
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

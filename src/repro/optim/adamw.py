@@ -2,13 +2,12 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import ShardingRules, logical_to_pspec
-from repro.models.params import ParamSpec, _is_spec
+from repro.distributed.sharding import ShardingRules
 
 
 class AdamWState(NamedTuple):

@@ -10,15 +10,15 @@ pyramid gives us block-granular access already).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import get_model, init_params
-from repro.models.params import init_params as _init
+from repro.distributed import mesh_utils
+from repro.models import get_model
 
 
 @dataclasses.dataclass
@@ -47,31 +47,59 @@ def make_prefill(cfg: ModelConfig):
 
 
 class Engine:
-    """Batched request server over ``slots`` concurrent sequences."""
+    """Batched request server over ``slots`` concurrent sequences.
 
-    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4, max_len: int = 512):
+    With ``mesh`` set, the engine serves tensor-parallel: parameters and the
+    decode state (KV cache, pyramid block sums, dequant scales) are placed by
+    their ParamSpec logical axes — batch/slots over the data axes, kv-heads
+    over the model axis — and the decode step runs under the mesh so
+    ``cfg.attn_shard`` routes attention through shard_map (DESIGN.md §8).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 512, mesh=None):
         from repro.models.params import init_params as build
 
         self.cfg = cfg
-        self.params = params
         self.model = get_model(cfg)
         self.slots = slots
         self.max_len = max_len
+        self.mesh = mesh
         cache_specs = self.model.cache_specs(cfg, slots, max_len)
         self.cache = build(cache_specs, jax.random.PRNGKey(0))  # zeros-init specs
+        if mesh is not None:
+            from repro.models.params import param_shardings
+
+            params = jax.tree.map(
+                jax.device_put, params,
+                param_shardings(self.model.param_specs(cfg), mesh),
+            )
+            self.cache = jax.tree.map(
+                jax.device_put, self.cache, param_shardings(cache_specs, mesh)
+            )
+        self.params = params
         self._decode = jax.jit(make_serve_step(cfg))
         self.active: List[Optional[Request]] = [None] * slots
         self.tokens = np.zeros((slots,), np.int32)
         self.remaining = np.zeros((slots,), np.int64)
 
+    def _step(self, tokens):
+        """One jitted decode step under the engine's mesh (if any)."""
+        with mesh_utils.use_mesh(self.mesh):
+            logits, self.cache = self._decode(self.params, self.cache, tokens)
+        return logits
+
     def _prefill_one(self, slot: int, req: Request):
         """Sequential per-slot prefill via decode steps (simple & correct)."""
         toks = req.prompt.astype(np.int32)
+        logits = None
         for t in toks:
             batch_tok = jnp.asarray(self.tokens)
             batch_tok = batch_tok.at[slot].set(int(t))
-            logits, self.cache = self._decode(self.params, self.cache, batch_tok)
-        self.tokens[slot] = int(jnp.argmax(logits[slot]))
+            logits = self._step(batch_tok)
+        if logits is not None:
+            self.tokens[slot] = int(jnp.argmax(logits[slot]))
+        # empty prompt: keep the slot's current token as the seed
         req.out = np.array([], np.int32)
         self.remaining[slot] = req.max_new_tokens
 
@@ -88,9 +116,7 @@ class Engine:
                     req = pending.pop(0)
                     self.active[s] = req
                     self._prefill_one(s, req)
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(self.tokens)
-            )
+            logits = self._step(jnp.asarray(self.tokens))
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
             for s in range(self.slots):
                 req = self.active[s]

@@ -18,18 +18,17 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore
 from repro.configs.base import ModelConfig, ShapeCfg
 from repro.data import DataLoader
 from repro.distributed import mesh_utils
 from repro.distributed.sharding import ShardingRules, logical_to_pspec
-from repro.models import abstract_params, get_model, init_params, param_shardings
+from repro.models import get_model, init_params, param_shardings
 from repro.models.params import param_pspecs
 from repro.optim import AdamW, cosine_schedule
 from repro.optim.adamw import zero_pspec
@@ -52,14 +51,22 @@ class TrainConfig:
     # kernel_interpret runs them in interpret mode (CPU smoke of the TPU path).
     use_kernel: Optional[bool] = None
     kernel_interpret: bool = False
+    # Mesh-sharded training: (data, model) mesh built over the local devices
+    # when ``train()`` is not handed a mesh explicitly. None = single device.
+    # shard_attention: None = keep the model config's attn_shard; True/False
+    # force the shard_map attention path on/off for this run (DESIGN.md §8).
+    mesh_shape: Optional[Tuple[int, int]] = None
+    shard_attention: Optional[bool] = None
 
 
 def _apply_kernel_flags(cfg: ModelConfig, tc: TrainConfig) -> ModelConfig:
-    if tc.use_kernel is None:
-        return cfg
-    return cfg.replace(
-        attn_use_kernel=tc.use_kernel, attn_interpret=tc.kernel_interpret
-    )
+    if tc.use_kernel is not None:
+        cfg = cfg.replace(
+            attn_use_kernel=tc.use_kernel, attn_interpret=tc.kernel_interpret
+        )
+    if tc.shard_attention is not None:
+        cfg = cfg.replace(attn_shard=tc.shard_attention)
+    return cfg
 
 
 def make_train_step(cfg: ModelConfig, tc: TrainConfig, optimizer: AdamW,
@@ -135,6 +142,10 @@ def train(cfg: ModelConfig, shape: ShapeCfg, tc: TrainConfig, *, mesh=None,
           rules: Optional[ShardingRules] = None, on_metrics=None):
     """Full driver: init/restore -> loop -> checkpoint. Returns final metrics."""
     cfg = _apply_kernel_flags(cfg, tc)
+    if mesh is None and tc.mesh_shape is not None:
+        from repro.launch.mesh import make_local_mesh
+
+        mesh = make_local_mesh(*tc.mesh_shape)
     model = get_model(cfg)
     optimizer = AdamW()
     lr_fn = cosine_schedule(tc.lr, tc.warmup, tc.steps)
@@ -153,6 +164,13 @@ def train(cfg: ModelConfig, shape: ShapeCfg, tc: TrainConfig, *, mesh=None,
     if mesh is not None:
         params = jax.tree.map(jax.device_put, params, shardings)
     opt_state = optimizer.init(params)
+    if mesh is not None:
+        # ZeRO-1: moments shard over the data axes on top of the parameter's
+        # own TP/EP spec (optim/adamw.zero_pspec); step stays replicated.
+        opt_state = opt_state._replace(
+            mu=jax.tree.map(jax.device_put, opt_state.mu, opt_shardings),
+            nu=jax.tree.map(jax.device_put, opt_state.nu, opt_shardings),
+        )
 
     start_step = 0
     ckpter = AsyncCheckpointer()
@@ -161,9 +179,17 @@ def train(cfg: ModelConfig, shape: ShapeCfg, tc: TrainConfig, *, mesh=None,
         if last is not None:
             params = restore(tc.ckpt_dir, last, params,
                              shardings=shardings if mesh is not None else None)
+            opt_sh = None
+            if mesh is not None:
+                # resume keeps the ZeRO-1 moment placement of the fresh path
+                opt_sh = opt_state._replace(
+                    step=jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec()),
+                    mu=opt_shardings, nu=opt_shardings,
+                )
             opt_state = restore(
                 tc.ckpt_dir + "/opt", last, opt_state,
-                shardings=None,
+                shardings=opt_sh,
             )
             start_step = last
 

@@ -19,13 +19,13 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mra import MraConfig, full_attention, mra2_attention
+from repro.core.mra import MraConfig
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,7 +11,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 _ENV = {**os.environ, "PYTHONPATH": "src",
         "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
@@ -134,7 +133,10 @@ def test_dryrun_machinery_small_mesh():
             ).compile()
             mem = c.memory_analysis()
             assert mem.temp_size_in_bytes > 0
-            print("OK", c.cost_analysis().get("flops", 0) > 0)
+            ca = c.cost_analysis()
+            if isinstance(ca, list):  # jax 0.4.x returns one dict per computation
+                ca = ca[0] if ca else {}
+            print("OK", ca.get("flops", 0) > 0)
     """)
     assert "OK" in out
 

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config, get_smoke_config
-from repro.configs.base import SHAPES, ShapeCfg
+from repro.configs.base import ShapeCfg
 from repro.data import make_batch
 from repro.models import count_params, get_model, init_params
 

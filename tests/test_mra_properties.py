@@ -4,10 +4,9 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 
 import hypothesis.strategies as st
-import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from hypothesis import given
 
 from repro.core.mra import MraConfig, block_mean, full_attention, mra2_attention
 

@@ -1,0 +1,205 @@
+"""Sharded-vs-single-device parity on a DP=2 x TP=4 fake CPU mesh.
+
+The device-count flag must be set before jax initializes, so these tests run
+in fresh subprocesses (same pattern as test_dist_cpu.py). They pin the
+DESIGN.md §8 sharding contract: attention run inside shard_map (batch over
+the data axes, kv-heads over the model axis) matches the single-device path
+— forward outputs, loss, and gradients — for both the pure-jnp and the
+interpret-mode Pallas kernel routes, causal and padded, and for the serve
+decode step over the sharded KV cache + pyramid.
+
+Run via ``scripts/ci.sh shard`` (the fast tier deselects the ``shard``
+marker; CI runs it as its own job under 8 fake host devices).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+pytestmark = pytest.mark.shard
+
+_ENV = {**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu",
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+
+
+def _run(code: str):
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=_ENV,
+                       cwd=os.path.dirname(os.path.dirname(__file__)),
+                       timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+@pytest.mark.parametrize("use_kernel", [False, True], ids=["jnp", "kernel"])
+def test_attention_parity_causal_padded(use_kernel):
+    """mra2_attention under shard_map == single device: fwd + grads.
+
+    Sweeps causal x padded on a (2, 4) mesh with Hkv=4 (head-sharded, GQA
+    group-aligned) — the Pallas kernel (interpret mode) runs per-shard with
+    its custom_vjp backward.
+    """
+    out = _run(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed import mesh_utils
+        from repro.launch.mesh import make_local_mesh
+
+        r = np.random.default_rng(0)
+        B, Hq, Hkv, N, D = 4, 8, 4, 96, 16   # N pads to 128 under b=16
+        q = jnp.asarray(r.standard_normal((B, Hq, N, D)), jnp.float32)
+        k = jnp.asarray(r.standard_normal((B, Hkv, N, D)), jnp.float32)
+        v = jnp.asarray(r.standard_normal((B, Hkv, N, D)), jnp.float32)
+        km_full = jnp.ones((B, N), bool)
+        km_pad = jnp.asarray(r.random((B, N)) > 0.25)
+        mesh = make_local_mesh(2, 4)
+
+        for causal in (False, True):
+            for km in (km_full, km_pad):
+                def build(shard):
+                    def f(q, k, v):
+                        from repro.core.attention import AttentionSpec, \\
+                            self_attention
+                        spec = AttentionSpec(
+                            kind="mra2", block_size=16, blocks_per_row=3,
+                            use_kernel={use_kernel}, interpret={use_kernel},
+                            shard=shard)
+                        return self_attention(q, k, v, spec, causal=causal,
+                                              key_mask=km)
+                    return f
+
+                f_ref, f_sh = build(False), build(True)
+                ref = jax.jit(f_ref)(q, k, v)
+                with mesh_utils.use_mesh(mesh):
+                    out = jax.jit(f_sh)(q, k, v)
+                ferr = float(jnp.abs(out - ref).max())
+                loss = lambda f: lambda q, k, v: jnp.sum(jnp.tanh(f(q, k, v)))
+                gref = jax.jit(jax.grad(loss(f_ref), argnums=(0, 1, 2)))(q, k, v)
+                with mesh_utils.use_mesh(mesh):
+                    gsh = jax.jit(jax.grad(loss(f_sh), argnums=(0, 1, 2)))(q, k, v)
+                gerr = max(float(jnp.abs(a - b).max())
+                           for a, b in zip(gref, gsh))
+                assert ferr < 1e-5, (causal, ferr)
+                assert gerr < 1e-4, (causal, gerr)
+                print("OK", causal, bool(km is km_pad), ferr, gerr)
+    """)
+    assert out.count("OK") == 4
+
+
+@pytest.mark.parametrize("use_kernel", [False, True], ids=["jnp", "kernel"])
+def test_train_step_parity(use_kernel):
+    """Model logits, loss, and grads match on the (2, 4) mesh."""
+    out = _run(f"""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_smoke_config
+        from repro.configs.base import ShapeCfg
+        from repro.data import make_batch
+        from repro.distributed import mesh_utils
+        from repro.launch.mesh import make_local_mesh
+        from repro.models import get_model, init_params, param_shardings
+
+        cfg = get_smoke_config("qwen3-1.7b", num_heads=8, kv_heads=4,
+                               head_dim=8, activ_dtype="float32",
+                               attn_use_kernel={use_kernel},
+                               attn_interpret={use_kernel})
+        model = get_model(cfg)
+        shape = ShapeCfg("s", 64, 8, "train")
+        batch = {{k: jnp.asarray(v) for k, v in make_batch(cfg, shape).items()}}
+        params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+
+        def eval_all(c, p):
+            logits, _ = model.forward(p, c, batch)
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: model.loss_fn(p, c, batch), has_aux=True)(p)
+            return logits, loss, grads
+
+        logits0, loss0, grads0 = jax.jit(
+            lambda p: eval_all(cfg, p))(params)
+
+        cfg_sh = cfg.replace(attn_shard=True)
+        mesh = make_local_mesh(2, 4)
+        p_sh = jax.tree.map(jax.device_put, params,
+                            param_shardings(model.param_specs(cfg_sh), mesh))
+        with mesh_utils.use_mesh(mesh):
+            logits1, loss1, grads1 = jax.jit(
+                lambda p: eval_all(cfg_sh, p))(p_sh)
+
+        lerr = float(jnp.abs(logits0 - logits1).max())
+        derr = abs(float(loss0) - float(loss1))
+        gerr = max(jax.tree.leaves(jax.tree.map(
+            lambda a, b: float(jnp.abs(a - b).max()), grads0, grads1)))
+        assert lerr < 5e-4, lerr
+        assert derr < 1e-4, derr
+        assert gerr < 5e-3, gerr
+        print("OK", lerr, derr, gerr)
+    """)
+    assert "OK" in out
+
+
+def test_serve_step_parity():
+    """decode_step over the sharded cache (+pyramid) matches single device."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_smoke_config
+        from repro.distributed import mesh_utils
+        from repro.launch.mesh import make_local_mesh
+        from repro.models import get_model, init_params
+        from repro.models.params import init_params as build, param_shardings
+
+        cfg = get_smoke_config("qwen3-1.7b", num_heads=8, kv_heads=4, head_dim=8,
+                               activ_dtype="float32")
+        model = get_model(cfg)
+        params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+        B, steps = 4, 5
+        toks = np.random.default_rng(0).integers(0, cfg.vocab, (steps, B))
+
+        def roll(c, mesh):
+            specs = model.cache_specs(c, B, 64)
+            cache = build(specs, jax.random.PRNGKey(0))
+            p = params
+            if mesh is not None:
+                cache = jax.tree.map(jax.device_put, cache,
+                                     param_shardings(specs, mesh))
+                p = jax.tree.map(jax.device_put, params,
+                                 param_shardings(model.param_specs(c), mesh))
+            step = jax.jit(lambda p, cache, t: model.decode_step(p, c, cache, t))
+            outs = []
+            with mesh_utils.use_mesh(mesh):
+                for t in toks:
+                    logits, cache = step(p, cache, jnp.asarray(t, jnp.int32))
+                    outs.append(logits)
+            return jnp.stack(outs)
+
+        ref = roll(cfg, None)
+        mesh = make_local_mesh(2, 4)
+        got = roll(cfg.replace(attn_shard=True), mesh)
+        err = float(jnp.abs(ref - got).max())
+        assert err < 5e-4, err
+        print("OK", err)
+    """)
+    assert "OK" in out
+
+
+def test_engine_tp_serving_matches():
+    """The continuous-batching Engine generates identical tokens under TP."""
+    out = _run("""
+        import numpy as np, jax
+        from repro.configs import get_smoke_config
+        from repro.launch.mesh import make_local_mesh
+        from repro.models import get_model, init_params
+        from repro.serve import Engine, Request
+
+        cfg = get_smoke_config("qwen3-1.7b", num_heads=8, kv_heads=4, head_dim=8)
+        params = init_params(get_model(cfg).param_specs(cfg), jax.random.PRNGKey(0))
+        reqs = lambda: [Request(prompt=np.array([3, 5, 7]), max_new_tokens=4),
+                        Request(prompt=np.array([11, 13]), max_new_tokens=4)]
+        ref = Engine(cfg, params, slots=2, max_len=64).run(reqs())
+        mesh = make_local_mesh(2, 4)
+        got = Engine(cfg.replace(attn_shard=True), params, slots=2,
+                     max_len=64, mesh=mesh).run(reqs())
+        for a, b in zip(ref, got):
+            assert np.array_equal(a.out, b.out), (a.out, b.out)
+        print("OK")
+    """)
+    assert "OK" in out

@@ -4,17 +4,15 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
 from repro.data import make_batch
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeCfg
 from repro.distributed.sharding import logical_to_pspec
-from repro.launch.mesh import make_local_mesh
 from repro.optim import AdamW, cosine_schedule
 from repro.optim.adamw import zero_pspec
-from repro.optim.compression import EFState, compress, init_ef
+from repro.optim.compression import compress, init_ef
 
 
 # --------------------------------------------------------------------------- #
@@ -119,7 +117,6 @@ def test_data_shard_disjoint():
 # sharding rules
 # --------------------------------------------------------------------------- #
 def test_rules_divisibility_fallback():
-    mesh = make_local_mesh(1, 1)  # names exist but size-1: everything divides
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}

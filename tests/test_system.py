@@ -1,9 +1,6 @@
 """End-to-end system test: train a tiny MRA-attention LM on the synthetic
 corpus, checkpoint, restart, then serve it — the full production loop."""
-import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
