@@ -60,6 +60,39 @@ def run(emit):
         lambda q, k, v: decode_attention(q, k, v, lengths, full_spec), q, k, v)
     emit("full_decode_s4096", us, "0.0000")
 
+    # ring-paged decode (DESIGN.md §9): a 6144-token stream served through the
+    # 4096-token ring — live window is blocks nb/2 .. 3nb/2-1, with the newer
+    # half wrapped onto pages 0..nb/2-1 (ring layout). Conformance: must match
+    # the same window laid out contiguously (rebased); derived = that error.
+    nb = S // b
+    spec = AttentionSpec(kind="mra2", block_size=b, decode_blocks=16,
+                         shard=shard)
+    lengths2 = jnp.full((B,), S + S // 2, jnp.int32)
+    blocks_contig = jnp.arange(nb, dtype=jnp.int32) + nb // 2  # ascending
+    pb_contig = jnp.broadcast_to(blocks_contig[None], (B, nb))
+    # ring placement: block y lives at page y % nb -> roll the contiguous
+    # layout by half a ring
+    pb_ring = jnp.roll(pb_contig, nb // 2, axis=1)
+    k_ring = jnp.roll(k, (nb // 2) * b, axis=2)
+    v_ring = jnp.roll(v, (nb // 2) * b, axis=2)
+    if shard:
+        parts = attention_partition(mesh, B, Hkv)
+        if parts is not None:
+            bpart = parts[0]
+            pb_contig = jax.device_put(pb_contig, NamedSharding(mesh, P(bpart, None)))
+            pb_ring = jax.device_put(pb_ring, NamedSharding(mesh, P(bpart, None)))
+            k_ring = jax.device_put(k_ring, s4)
+            v_ring = jax.device_put(v_ring, s4)
+    ref2 = decode_attention(q, k, v, lengths2, spec, page_blocks=pb_contig)
+    out2 = decode_attention(q, k_ring, v_ring, lengths2, spec,
+                            page_blocks=pb_ring)
+    err = float(jnp.abs(out2 - ref2).max())
+    us = time_call(
+        lambda q, k_ring, v_ring: decode_attention(
+            q, k_ring, v_ring, lengths2, spec, page_blocks=pb_ring),
+        q, k_ring, v_ring)
+    emit("mra_decode_paged_ring_s4096", us, f"{err:.6f}")
+
 
 def main() -> None:
     import argparse

@@ -10,6 +10,8 @@ mirror them to a JSON file (``--json``) for the CI perf-trajectory artifact.
   swap_eval     -> paper Tab. 1/2 (drop-in compatibility with trained weights)
   decode_bench  -> beyond-paper MRA decode (KV-block selection)
   kernel_bench  -> fwd+bwd Pallas-kernel vs jnp path timing + grad parity
+  serve_bench   -> continuous-batching engine (req/s, tok/s, inter-token
+                   latency p50/p99, chunked-prefill dispatch economy)
 
 ``--mesh DxM`` (default "1": no mesh) activates a (data, model) device mesh
 for the run: modules read it via ``mesh_utils.get_mesh()`` and place/shard
@@ -35,7 +37,7 @@ def main() -> None:
     from repro.launch.mesh import parse_mesh
 
     from . import (approx_error, decode_bench, entropy_error, kernel_bench,
-                   scaling, swap_eval)
+                   scaling, serve_bench, swap_eval)
 
     modules = {
         "approx_error": approx_error,
@@ -44,6 +46,7 @@ def main() -> None:
         "swap_eval": swap_eval,
         "decode_bench": decode_bench,
         "kernel_bench": kernel_bench,
+        "serve_bench": serve_bench,
     }
     chosen = args.only.split(",") if args.only else list(modules)
     mesh = parse_mesh(args.mesh)

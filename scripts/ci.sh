@@ -27,6 +27,16 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 case "${1:-fast}" in
   fast) python -m pytest -x -q ;;                # pytest.ini deselects slow+shard
   lint)
+    # tracked bytecode is a repo-hygiene regression (76 .pyc files were once
+    # committed by accident); fail fast if it ever reappears
+    if git -C . rev-parse --git-dir >/dev/null 2>&1; then
+      TRACKED_PYC=$(git ls-files -- '*.pyc' '**/__pycache__/**' | head -5)
+      if [ -n "$TRACKED_PYC" ]; then
+        echo "[ci] FAIL: compiled bytecode is tracked by git:" >&2
+        echo "$TRACKED_PYC" >&2
+        exit 1
+      fi
+    fi
     if python -m ruff --version >/dev/null 2>&1; then RUFF="python -m ruff";
     elif command -v ruff >/dev/null 2>&1; then RUFF="ruff";
     else

@@ -15,7 +15,12 @@ import jax.numpy as jnp
 
 from . import baselines
 from .mra import MraConfig, full_attention, mra2_attention
-from .mra_decode import full_decode_attention, mra2_decode_attention
+from .mra_decode import (
+    full_chunk_attention,
+    full_decode_attention,
+    mra2_chunk_attention,
+    mra2_decode_attention,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +113,7 @@ def decode_attention(
     spec: AttentionSpec,
     *,
     pyramid=None,
+    page_blocks=None,
     k_scale=None,
     v_scale=None,
 ) -> jax.Array:
@@ -117,7 +123,7 @@ def decode_attention(
 
         out = sharded_decode_attention(
             q, k_cache, v_cache, lengths, spec, pyramid=pyramid,
-            k_scale=k_scale, v_scale=v_scale,
+            page_blocks=page_blocks, k_scale=k_scale, v_scale=v_scale,
         )
         if out is not None:
             return out
@@ -126,12 +132,52 @@ def decode_attention(
         return mra2_decode_attention(
             q, k_cache, v_cache, lengths, cfg,
             decode_blocks=spec.decode_blocks, pyramid=pyramid,
-            k_scale=k_scale, v_scale=v_scale,
+            page_blocks=page_blocks, k_scale=k_scale, v_scale=v_scale,
         )
     if spec.kind == "local":
         return _local_decode_attention(q, k_cache, v_cache, lengths, spec)
     return full_decode_attention(q, k_cache, v_cache, lengths,
                                  softmax_scale=spec.softmax_scale)
+
+
+def chunk_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    q_pos: jax.Array,
+    spec: AttentionSpec,
+    *,
+    pyramid=None,
+    page_blocks=None,
+    k_scale=None,
+    v_scale=None,
+) -> jax.Array:
+    """Chunked-prefill attention: C queries (already written to the cache)
+    attend the KV cache causally at their global positions ``q_pos`` (B, C).
+    This is what lets the serving engine prefill prompts in O(P/C) jitted
+    dispatches instead of O(P) single-token decode replays (DESIGN.md §9).
+    """
+    if spec.shard:
+        from repro.distributed.shard_attn import sharded_chunk_attention
+
+        out = sharded_chunk_attention(
+            q, k_cache, v_cache, lengths, q_pos, spec, pyramid=pyramid,
+            page_blocks=page_blocks, k_scale=k_scale, v_scale=v_scale,
+        )
+        if out is not None:
+            return out
+    if spec.kind in ("mra2", "mra2_s"):
+        cfg = spec.mra_config(causal=True)
+        return mra2_chunk_attention(
+            q, k_cache, v_cache, lengths, q_pos, cfg,
+            decode_blocks=spec.decode_blocks, pyramid=pyramid,
+            page_blocks=page_blocks, k_scale=k_scale, v_scale=v_scale,
+        )
+    window = spec.local_window if spec.kind == "local" else None
+    return full_chunk_attention(q, k_cache, v_cache, lengths, q_pos,
+                                softmax_scale=spec.softmax_scale,
+                                local_window=window)
 
 
 def _local_attention(q, k, v, spec, *, causal, key_mask):

@@ -11,6 +11,15 @@ what makes the ``long_500k`` shapes sub-quadratic end-to-end.
 
 An incrementally-maintained block-sum pyramid (``PyramidState``) makes the
 coarse scores O(1) to update per appended token instead of O(S) to recompute.
+
+Ring-paged cache (DESIGN.md §9): the physical cache of ``nb`` block-sized
+pages can serve a *logical* stream longer than the cache. ``page_blocks``
+(B, nb) int32 maps physical page -> logical block index (-1 = never
+written); position ``p`` lives at physical index ``p % S`` and its block at
+page ``(p // b) % nb``, so appending evicts the oldest background block in
+ring order while the pyramid entry *is* the page-table row. All attention
+entry points below accept ``page_blocks``; ``None`` means the identity table
+(page y holds block y), which reproduces the dense layout bit-for-bit.
 """
 from __future__ import annotations
 
@@ -46,10 +55,71 @@ class PyramidState(NamedTuple):
         return PyramidState(k_sum, v_sum)
 
 
-def block_counts(lengths: jax.Array, nb: int, block: int) -> jax.Array:
-    """(B, nb) number of valid tokens per key block given valid ``lengths``."""
-    starts = jnp.arange(nb) * block
-    return jnp.clip(lengths[:, None] - starts[None, :], 0, block)
+def identity_page_table(batch: int, nb: int) -> jax.Array:
+    """Dense layout: physical page y holds logical block y."""
+    return jnp.broadcast_to(jnp.arange(nb, dtype=jnp.int32)[None], (batch, nb))
+
+
+def paged_block_counts(lengths: jax.Array, page_blocks: jax.Array, block: int):
+    """(B, nb) valid tokens per *page* given the page table and total length.
+
+    A live page holding logical block y contains tokens [y*b, min(len, y*b+b));
+    only the newest block is ever partial (eviction replaces whole pages), so
+    for the identity table this is the dense per-block count clip.
+    """
+    starts = page_blocks * block
+    c = jnp.clip(lengths[:, None] - starts, 0, block)
+    return jnp.where(page_blocks >= 0, c, 0)
+
+
+def paged_position_mask(lengths: jax.Array, page_blocks: jax.Array, S: int,
+                        block: int) -> jax.Array:
+    """(B, S) validity of each physical cache index under the page table."""
+    idx = jnp.arange(S)
+    pb = jnp.take(page_blocks, idx // block, axis=1)  # (B, S)
+    pos = pb * block + (idx % block)[None, :]
+    return (pb >= 0) & (pos < lengths[:, None])
+
+
+def ring_pyramid_update(
+    pyramid: PyramidState,
+    page_blocks: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    pos: jax.Array,
+    block: int,
+    active: Optional[jax.Array] = None,
+):
+    """Append one token's K/V (B, Hkv, D) at global position ``pos`` (B,).
+
+    Ring-paged version of ``PyramidState.append``: the target page is
+    ``(pos // block) % nb``; when the token starts a new block the page is
+    *recycled* — its old block sum is dropped (eviction) and ownership moves
+    to the new logical block. Slots with ``active`` False are left untouched
+    bit-for-bit. Returns (PyramidState, page_blocks).
+    """
+    nb = pyramid.k_sum.shape[2]
+    b_idx = jnp.arange(pyramid.k_sum.shape[0])
+    blk = pos // block
+    page = blk % nb
+    if active is None:
+        active = jnp.ones(pos.shape, bool)
+    k_old = pyramid.k_sum[b_idx, :, page]
+    v_old = pyramid.v_sum[b_idx, :, page]
+    # recycle the page (drop the evicted block's sums) only when an *active*
+    # slot writes the first token of a new block
+    keep = ~(active & ((pos % block) == 0))
+    k_base = jnp.where(keep[:, None, None], k_old, 0.0)
+    v_base = jnp.where(keep[:, None, None], v_old, 0.0)
+    am = active[:, None, None]
+    k_sum = pyramid.k_sum.at[b_idx, :, page].set(
+        k_base + jnp.where(am, k_new.astype(pyramid.k_sum.dtype), 0.0))
+    v_sum = pyramid.v_sum.at[b_idx, :, page].set(
+        v_base + jnp.where(am, v_new.astype(pyramid.v_sum.dtype), 0.0))
+    old_owner = page_blocks[b_idx, page]
+    page_blocks = page_blocks.at[b_idx, page].set(
+        jnp.where(active, blk.astype(page_blocks.dtype), old_owner))
+    return PyramidState(k_sum, v_sum), page_blocks
 
 
 def quantize_kv(x: jax.Array):
@@ -69,6 +139,7 @@ def mra2_decode_attention(
     *,
     decode_blocks: int = 16,
     pyramid: Optional[PyramidState] = None,
+    page_blocks: Optional[jax.Array] = None,
     k_scale: Optional[jax.Array] = None,
     v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
@@ -82,13 +153,59 @@ def mra2_decode_attention(
       decode_blocks: selection budget m (number of exact key blocks).
       pyramid: optional incremental block sums; recomputed from the cache
         when absent.
+      page_blocks: (B, nb) ring page table (physical page -> logical block,
+        -1 dead); None = dense identity layout (page y is block y).
       k_scale/v_scale: (B, Hkv, S) per-token dequant scales when the cache is
         int8 (§Perf Y3); gathered blocks are dequantized after the gather.
 
     Returns:
       (B, Hq, 1, D) attention output.
     """
-    B, Hq, _, D = q.shape
+    # the decode step IS chunked-prefill attention with a C == 1 chunk whose
+    # query sits at the newest position — one implementation, one set of
+    # stabilizer/paging/dequant semantics (tests/test_engine.py pins the
+    # equivalence; the engine relies on it for its conformance contract)
+    return mra2_chunk_attention(
+        q, k_cache, v_cache, lengths, (lengths - 1)[:, None], cfg,
+        decode_blocks=decode_blocks, pyramid=pyramid, page_blocks=page_blocks,
+        k_scale=k_scale, v_scale=v_scale,
+    )
+
+
+def mra2_chunk_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    q_pos: jax.Array,
+    cfg: MraConfig,
+    *,
+    decode_blocks: int = 16,
+    pyramid: Optional[PyramidState] = None,
+    page_blocks: Optional[jax.Array] = None,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Chunked-prefill attention: C queries vs. the (ring-paged) KV cache.
+
+    The chunked generalization of ``mra2_decode_attention``: per query token
+    at global position ``p`` the coarse page scores pick the top-``m`` live
+    pages among blocks strictly before ``p // b`` for exact attention, the
+    query's own (partial) block is force-selected and masked exactly to
+    ``pos_k <= p``, and the remaining live past pages contribute the coarse
+    background. With C == 1 and ``q_pos == lengths - 1`` this is numerically
+    identical to the decode path (tests/test_engine.py pins it).
+
+    Args:
+      q: (B, Hq, C, D) chunk queries; their K/V must already be in the cache.
+      lengths: (B,) total written length (chunk included).
+      q_pos: (B, C) global position of each query token.
+      page_blocks: (B, nb) ring page table; None = dense identity layout.
+
+    Returns:
+      (B, Hq, C, D) attention output.
+    """
+    B, Hq, C, D = q.shape
     Hkv, S = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
     b = cfg.block_size
@@ -98,85 +215,118 @@ def mra2_decode_attention(
     scale = cfg.softmax_scale if cfg.softmax_scale is not None else 1.0 / (D**0.5)
     cdt = cfg.compute_dtype
 
-    counts = block_counts(lengths, nb, b).astype(cdt)  # (B, nb)
+    pb = page_blocks if page_blocks is not None else identity_page_table(B, nb)
+    counts = paged_block_counts(lengths, pb, b).astype(cdt)  # (B, nb)
     if pyramid is None:
-        mask = (jnp.arange(S) < lengths[:, None]).astype(k_cache.dtype)  # (B, S)
+        mask = paged_position_mask(lengths, pb, S, b).astype(k_cache.dtype)
         k_sum = jnp.sum(
             (k_cache * mask[:, None, :, None]).reshape(B, Hkv, nb, b, D),
-            axis=3, dtype=cdt,
-        )
+            axis=3, dtype=cdt)
         v_sum = jnp.sum(
             (v_cache * mask[:, None, :, None]).reshape(B, Hkv, nb, b, D),
-            axis=3, dtype=cdt,
-        )
+            axis=3, dtype=cdt)
     else:
         k_sum, v_sum = pyramid.k_sum.astype(cdt), pyramid.v_sum.astype(cdt)
-
     denom = jnp.maximum(counts, 1.0)[:, None, :, None]
     k_ds = k_sum / denom  # (B, Hkv, nb, D)
     v_ds = v_sum / denom
 
-    qg = q.reshape(B, Hkv, G, D).astype(cdt)
-    coarse = jnp.einsum("bhgd,bhyd->bhgy", qg, k_ds) * scale  # (B, Hkv, G, nb)
-    valid = counts > 0  # (B, nb)
-    coarse_m = jnp.where(valid[:, None, None, :], coarse, NEG_INF)
-
-    # always select the newest (possibly partial) block: exact local context and
-    # the only partially-filled block, so background blocks are always full.
-    last_blk = jnp.clip((lengths - 1) // b, 0, nb - 1)  # (B,)
-    sel_scores = coarse_m + FORCE_BONUS * (
-        jnp.arange(nb)[None, None, None, :] == last_blk[:, None, None, None]
-    )
-    top_vals, y_idx = jax.lax.top_k(sel_scores, m)  # (B, Hkv, G, m)
+    qg = q.reshape(B, Hkv, G, C, D).astype(cdt)
+    coarse = jnp.einsum("bhgcd,bhyd->bhgcy", qg, k_ds) * scale  # (B,Hkv,G,C,nb)
+    live = counts > 0  # (B, nb)
+    jq = q_pos // b  # (B, C) query block index
+    pb_q = pb[:, None, None, None, :]  # (B,1,1,1,nb)
+    jq_q = jq[:, None, None, :, None]  # (B,1,1,C,1)
+    # causal at block granularity: past blocks are background candidates, the
+    # query's own block is force-selected (exactly masked), future excluded.
+    allowed = live[:, None, None, None, :] & (pb_q <= jq_q)
+    own = pb_q == jq_q
+    coarse_m = jnp.where(allowed, coarse, NEG_INF)
+    sel_scores = coarse_m + FORCE_BONUS * own
+    top_vals, y_idx = jax.lax.top_k(sel_scores, m)  # (B, Hkv, G, C, m)
     sel_ok = top_vals > NEG_INF * 0.5
 
-    c = jnp.maximum(jnp.max(coarse_m, axis=-1), NEG_INF * 0.5)  # (B, Hkv, G)
+    c = jnp.maximum(jnp.max(coarse_m, axis=-1), NEG_INF * 0.5)  # (B,Hkv,G,C)
 
-    # ---- exact term over selected blocks -----------------------------------
-    # gather in the cache dtype and cast the (small) gathered blocks only:
-    # casting the whole cache first materializes a full fp32 copy (16 GiB at
-    # 32k x 128 batch) and blocks buffer donation — §Perf iteration Y1.
-    k_blocks = k_cache.reshape(B, Hkv, nb, b, D)
-    v_blocks = v_cache.reshape(B, Hkv, nb, b, D)
+    # ---- exact term over selected pages ------------------------------------
+    k_blocks = k_cache.reshape(B, Hkv, nb, b, D)[:, :, None, None]
+    v_blocks = v_cache.reshape(B, Hkv, nb, b, D)[:, :, None, None]
     gidx = jnp.broadcast_to(y_idx[..., None, None], y_idx.shape + (1, 1))
-    k_sel = jnp.take_along_axis(k_blocks[:, :, None], gidx, axis=3).astype(cdt)
-    v_sel = jnp.take_along_axis(v_blocks[:, :, None], gidx, axis=3).astype(cdt)
+    k_sel = jnp.take_along_axis(k_blocks, gidx, axis=4).astype(cdt)
+    v_sel = jnp.take_along_axis(v_blocks, gidx, axis=4).astype(cdt)
     if k_scale is not None:  # int8 cache: dequantize the gathered blocks only
         gs = jnp.broadcast_to(y_idx[..., None], y_idx.shape + (1,))
         ks = jnp.take_along_axis(
-            k_scale.reshape(B, Hkv, nb, b)[:, :, None], gs, axis=3).astype(cdt)
+            k_scale.reshape(B, Hkv, nb, b)[:, :, None, None], gs, axis=4
+        ).astype(cdt)
         vs = jnp.take_along_axis(
-            v_scale.reshape(B, Hkv, nb, b)[:, :, None], gs, axis=3).astype(cdt)
+            v_scale.reshape(B, Hkv, nb, b)[:, :, None, None], gs, axis=4
+        ).astype(cdt)
         k_sel = k_sel * ks[..., None]
         v_sel = v_sel * vs[..., None]
 
-    s = jnp.einsum("bhgd,bhgmjd->bhgmj", qg, k_sel) * scale  # (B,Hkv,G,m,b)
-    pos = y_idx[..., None] * b + jnp.arange(b)  # (B,Hkv,G,m,b) global positions
-    ok = (pos < lengths[:, None, None, None, None]) & sel_ok[..., None]
-    # two-level stabilizer (see mra.py): per-query max over the selected
-    # blocks' true scores, combined with the coarse max.
+    s = jnp.einsum("bhgcd,bhgcmjd->bhgcmj", qg, k_sel) * scale
+    blk_sel = jnp.take_along_axis(
+        jnp.broadcast_to(pb[:, None, None, None, :], (B, Hkv, G, C, nb)),
+        y_idx, axis=-1)
+    pos = blk_sel[..., None] * b + jnp.arange(b)  # (B,Hkv,G,C,m,b)
+    ok = (pos >= 0) & (pos <= q_pos[:, None, None, :, None, None])
+    ok = ok & sel_ok[..., None]
     fine_max = jnp.max(jnp.where(ok, s, NEG_INF), axis=(-1, -2))
-    c_tok = jax.lax.stop_gradient(jnp.maximum(c, fine_max))  # (B,Hkv,G)
+    c_tok = jax.lax.stop_gradient(jnp.maximum(c, fine_max))  # (B,Hkv,G,C)
     adj = jnp.exp(c - c_tok)
     a = jnp.where(ok, jnp.exp(jnp.minimum(s - c_tok[..., None, None], 80.0)), 0.0)
-    out = jnp.einsum("bhgmj,bhgmjd->bhgd", a, v_sel)
-    rs = jnp.sum(a, axis=(-1, -2))  # (B,Hkv,G)
+    out = jnp.einsum("bhgcmj,bhgcmjd->bhgcd", a, v_sel)
+    rs = jnp.sum(a, axis=(-1, -2))  # (B,Hkv,G,C)
 
     # ---- coarse background ---------------------------------------------------
     if cfg.variant == "full":
-        sel_grid = jnp.zeros((B, Hkv, G, nb), bool)
-        sel_grid = jax.vmap(jax.vmap(jax.vmap(lambda z, i, val: z.at[i].set(val))))(
-            sel_grid, y_idx, sel_ok
-        )
-        bg = valid[:, None, None, :] & ~sel_grid
-        w = jnp.where(bg, jnp.exp(coarse_m - c[..., None]), 0.0) * counts[:, None, None, :]
-        w = w * adj[..., None]
-        out = out + jnp.einsum("bhgy,bhyd->bhgd", w, v_ds)
+        sel_grid = jnp.any(
+            (y_idx[..., None] == jnp.arange(nb)) & sel_ok[..., None], axis=-2
+        )  # (B,Hkv,G,C,nb)
+        bg = allowed & ~own & ~sel_grid
+        w = jnp.where(bg, jnp.exp(coarse_m - c[..., None]), 0.0)
+        w = w * counts[:, None, None, None, :] * adj[..., None]
+        out = out + jnp.einsum("bhgcy,bhyd->bhgcd", w, v_ds)
         rs = rs + jnp.sum(w, axis=-1)
 
     alive = rs > 0
     out = jnp.where(alive[..., None], out, 0.0) / jnp.where(alive, rs, 1.0)[..., None]
-    return out.reshape(B, Hq, 1, D).astype(q.dtype)
+    return out.reshape(B, Hq, C, D).astype(q.dtype)
+
+
+def full_chunk_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    q_pos: jax.Array,
+    *,
+    softmax_scale: Optional[float] = None,
+    compute_dtype=jnp.float32,
+    local_window: Optional[int] = None,
+) -> jax.Array:
+    """Exact chunked-prefill attention oracle: C queries vs. a dense cache.
+
+    Each query at position p attends keys at positions <= p (optionally
+    restricted to the last ``local_window`` positions). O(C*S) per chunk.
+    """
+    B, Hq, C, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / (D**0.5)
+    qg = q.reshape(B, Hkv, G, C, D).astype(compute_dtype)
+    s = jnp.einsum("bhgcd,bhjd->bhgcj", qg, k_cache.astype(compute_dtype)) * scale
+    kp = jnp.arange(S)
+    ok = (kp[None, None, :] <= q_pos[:, :, None]) & (kp[None, None, :] < lengths[:, None, None])
+    if local_window is not None:
+        ok = ok & (kp[None, None, :] > q_pos[:, :, None] - local_window)
+    s = jnp.where(ok[:, None, None], s, NEG_INF)  # (B,1,1,C,S) -> broadcast
+    p = jax.nn.softmax(s, axis=-1)
+    has = jnp.any(ok, axis=-1)[:, None, None]  # all-masked rows -> zeros
+    out = jnp.einsum("bhgcj,bhjd->bhgcd", p, v_cache.astype(compute_dtype))
+    out = jnp.where(has[..., None], out, 0.0)
+    return out.reshape(B, Hq, C, D).astype(q.dtype)
 
 
 def full_decode_attention(

@@ -100,16 +100,18 @@ def sharded_self_attention(q, k, v, spec, *, causal, key_mask=None):
     )(args)
 
 
-def sharded_decode_attention(
-    q, k_cache, v_cache, lengths, spec, *, pyramid=None, k_scale=None,
-    v_scale=None
-):
-    """shard_map'd single-token decode attention (TP serving path).
+def _sharded_kv_attention(q, k_cache, v_cache, lengths, spec, *, q_pos=None,
+                          pyramid=None, page_blocks=None, k_scale=None,
+                          v_scale=None):
+    """Shared shard_map plumbing for attention over the decode state.
 
     The KV cache, the pyramid block sums, and the int8 dequant scales all
     carry (batch, kv_heads, ...) leading axes, so one (batch -> data,
-    kv_heads -> model) mapping covers the whole decode state; ``lengths``
-    shards over batch only. Returns None when the mesh can't shard it.
+    kv_heads -> model) mapping covers the whole state; ``lengths``, the ring
+    page table (``page_blocks``, shared by every kv head), and the chunk
+    query positions (``q_pos``, whose presence selects the chunked-prefill
+    callee over single-token decode) shard over batch only. Returns None
+    when the mesh can't shard it.
     """
     mesh = mesh_utils.get_mesh()
     if mesh is None or spec.kind not in SHARDABLE_KINDS:
@@ -124,23 +126,52 @@ def sharded_decode_attention(
 
     args = {"q": q, "k": k_cache, "v": v_cache, "len": lengths}
     in_specs = {"q": s4, "k": s4, "v": s4, "len": P(bpart)}
+    if q_pos is not None:
+        args["qp"] = q_pos
+        in_specs["qp"] = P(bpart, None)
     if pyramid is not None:
         args["pk"], args["pv"] = pyramid.k_sum, pyramid.v_sum
         in_specs["pk"] = in_specs["pv"] = s4
+    if page_blocks is not None:
+        args["pb"] = page_blocks
+        in_specs["pb"] = P(bpart, None)
     if k_scale is not None:
         args["ks"], args["vs"] = k_scale, v_scale
         in_specs["ks"] = in_specs["vs"] = s3
 
     def body(a):
-        from repro.core.attention import decode_attention
+        from repro.core.attention import chunk_attention, decode_attention
         from repro.core.mra_decode import PyramidState
 
         pyr = PyramidState(a["pk"], a["pv"]) if "pk" in a else None
-        return decode_attention(
-            a["q"], a["k"], a["v"], a["len"], local_spec, pyramid=pyr,
-            k_scale=a.get("ks"), v_scale=a.get("vs"),
-        )
+        kw = dict(pyramid=pyr, page_blocks=a.get("pb"), k_scale=a.get("ks"),
+                  v_scale=a.get("vs"))
+        if "qp" in a:
+            return chunk_attention(a["q"], a["k"], a["v"], a["len"], a["qp"],
+                                   local_spec, **kw)
+        return decode_attention(a["q"], a["k"], a["v"], a["len"], local_spec,
+                                **kw)
 
     return mesh_utils.shard_map(
         body, mesh, in_specs=(in_specs,), out_specs=s4, check_rep=False
     )(args)
+
+
+def sharded_decode_attention(
+    q, k_cache, v_cache, lengths, spec, *, pyramid=None, page_blocks=None,
+    k_scale=None, v_scale=None
+):
+    """shard_map'd single-token decode attention (TP serving path)."""
+    return _sharded_kv_attention(
+        q, k_cache, v_cache, lengths, spec, pyramid=pyramid,
+        page_blocks=page_blocks, k_scale=k_scale, v_scale=v_scale)
+
+
+def sharded_chunk_attention(
+    q, k_cache, v_cache, lengths, q_pos, spec, *, pyramid=None,
+    page_blocks=None, k_scale=None, v_scale=None
+):
+    """shard_map'd chunked-prefill attention (serving engine prefill path)."""
+    return _sharded_kv_attention(
+        q, k_cache, v_cache, lengths, spec, q_pos=q_pos, pyramid=pyramid,
+        page_blocks=page_blocks, k_scale=k_scale, v_scale=v_scale)

@@ -25,8 +25,8 @@ class ParamSpec:
     shape: Tuple[int, ...]
     axes: Tuple[Optional[str], ...]
     dtype: Any = jnp.float32
-    init: str = "normal"  # normal | zeros | ones | embed
-    scale: Optional[float] = None  # stddev; default fan-in
+    init: str = "normal"  # normal | zeros | ones | embed | fill
+    scale: Optional[float] = None  # stddev; default fan-in (fill: the value)
 
     def __post_init__(self):
         assert len(self.shape) == len(self.axes), (self.shape, self.axes)
@@ -41,6 +41,9 @@ def init_one(spec: ParamSpec, key: jax.Array) -> jax.Array:
         return jnp.zeros(spec.shape, spec.dtype)
     if spec.init == "ones":
         return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "fill":
+        return jnp.full(spec.shape, spec.scale if spec.scale is not None else 0,
+                        spec.dtype)
     if spec.init == "embed":
         std = spec.scale if spec.scale is not None else 0.02
         return (jax.random.normal(key, spec.shape) * std).astype(spec.dtype)

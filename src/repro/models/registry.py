@@ -6,7 +6,16 @@ Every family module provides:
   forward(params, cfg, batch)          -> (logits, aux)
   cache_specs(cfg, batch, max_len)     -> ParamSpec tree       [serving]
   prefill(params, cfg, batch, cache)   -> (logits, cache)
-  decode_step(params, cfg, cache, tok) -> (logits, cache)      [serve_step]
+  decode_step(params, cfg, cache, tok,
+              active=None)             -> (logits, cache)      [serving]
+
+The continuous-batching engine (serve/engine.py, DESIGN.md §9) additionally
+requires, and the transformer families implement:
+  prefill_chunk(params, cfg, cache, tokens, num_valid) -> (logits, cache)
+  decode_step honoring ``active`` (B,) bool — inactive slots' cache rows
+  preserved bit-for-bit (slot isolation under ragged batching).
+Families without these (rwkv6, recurrentgemma) still train/prefill/decode
+whole batches but are rejected by Engine at construction.
 """
 from __future__ import annotations
 

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.attention import decode_attention, self_attention
+from repro.core.attention import chunk_attention, decode_attention, self_attention
 from repro.core.mra_decode import PyramidState
 from . import layers as L
 from .moe import moe_block, moe_specs
@@ -201,6 +201,13 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
                              dtype=jnp.float32, init="zeros")
         c["pyr_k"] = [pyr_spec for _ in range(Lx)]
         c["pyr_v"] = [pyr_spec for _ in range(Lx)]
+        # ring page table (shared by all layers: every layer writes the same
+        # positions): physical page -> logical block, -1 = never written.
+        # Makes the fixed-size cache a ring over the newest ~max_len tokens —
+        # decode past max_len evicts the oldest background block per slot
+        # (DESIGN.md §9) instead of overflowing.
+        c["page_blocks"] = ParamSpec((batch, nb), ("batch", None),
+                                     dtype=jnp.int32, init="fill", scale=-1)
     return c
 
 
@@ -251,23 +258,152 @@ def prefill(params, cfg: ModelConfig, batch, cache):
             new_cache["pyr_v"] = list(new_cache["pyr_v"])
             new_cache["pyr_k"][i] = new_cache["pyr_k"][i].at[:, :, : S // bs].set(kb)
             new_cache["pyr_v"][i] = new_cache["pyr_v"][i].at[:, :, : S // bs].set(vb)
+    if "page_blocks" in new_cache:
+        nbp = new_cache["page_blocks"].shape[1]
+        written = jnp.arange(nbp) < S // cfg.attention.block_size
+        new_cache["page_blocks"] = jnp.where(
+            written[None], jnp.arange(nbp, dtype=jnp.int32)[None],
+            new_cache["page_blocks"])
     new_cache["lengths"] = jnp.full_like(cache["lengths"], S)
     x = L.apply_norm(x, params["ln_f"], cfg)
     logits = L.unembed(x[:, -1:], params["embed"], cfg)
     return logits[:, 0], new_cache
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens):
-    """One decode step. tokens (B,) int32 -> (logits (B,V), cache)."""
+def prefill_chunk(params, cfg: ModelConfig, cache, tokens, num_valid):
+    """Chunked batched prefill: C prompt tokens per slot, ragged lengths.
+
+    The serving engine's prefill path (DESIGN.md §9): each call advances every
+    prefilling slot by up to C prompt tokens in ONE jitted dispatch — the
+    chunk's K/V (and pyramid block sums) are written directly into the cache
+    at the slot's current offset, then the chunk's queries run MRA chunk
+    attention against the updated cache. O(ceil(P/C)) dispatches per prompt
+    instead of the O(P) single-token decode replays of the old engine, and a
+    slot's writes never touch other slots' rows (bit-exact slot isolation).
+
+    Args:
+      tokens: (B, C) int32 prompt chunk per slot (padding arbitrary).
+      num_valid: (B,) int32 count of real tokens in each slot's chunk;
+        0 freezes the slot for this call (cache rows preserved bit-for-bit).
+
+    Returns:
+      (logits (B, V) at each slot's last valid chunk position, cache).
+    """
+    B, C = tokens.shape
+    offsets = cache["lengths"]  # (B,)
+    positions = offsets[:, None] + jnp.arange(C, dtype=offsets.dtype)  # (B,C)
+    tv = jnp.arange(C) < num_valid[:, None]  # (B,C) chunk-token validity
+    lengths_new = offsets + num_valid.astype(offsets.dtype)
+    x = L.embed(tokens, params["embed"], cfg, positions=positions)
+    new_cache = dict(cache)
+    paged = "page_blocks" in cache
+    bs = cfg.attention.block_size
+    b_idx2 = jnp.broadcast_to(jnp.arange(B)[:, None], (B, C))
+    tv_kv = tv[:, :, None, None]  # (B,C,1,1) masks (B,C,Hkv,hd) writes
+
+    def scatter_tokens(arr, vals):
+        """Masked per-token write: vals (B, Hkv, C, ...) -> arr (B,Hkv,S,...)."""
+        widx = positions % arr.shape[2]  # distinct per lane while C <= S
+        vt = jnp.swapaxes(vals, 1, 2).astype(arr.dtype)  # (B,C,Hkv,...)
+        old = arr[b_idx2, :, widx]
+        m = tv_kv if vt.ndim == 4 else tv[:, :, None]
+        return arr.at[b_idx2, :, widx].set(jnp.where(m, vt, old))
+
+    for i, p in enumerate(_layers_iter(params, cfg)):
+        h = L.apply_norm(x, p["ln1"], cfg)
+        q, k_new, v_new = L.qkv_project(h, p["attn"], cfg, positions)
+        ks = vs = None
+        if "k_scale" in new_cache:  # int8 KV cache (§Perf Y3)
+            from repro.core.mra_decode import quantize_kv
+
+            kq, ksc = quantize_kv(k_new)
+            vq, vsc = quantize_kv(v_new)
+            new_cache["k_scale"] = list(new_cache["k_scale"])
+            new_cache["v_scale"] = list(new_cache["v_scale"])
+            ks = scatter_tokens(new_cache["k_scale"][i], ksc)
+            vs = scatter_tokens(new_cache["v_scale"][i], vsc)
+            new_cache["k_scale"][i] = ks
+            new_cache["v_scale"][i] = vs
+            k_write, v_write = kq, vq
+        else:
+            k_write, v_write = k_new, v_new
+        kc = scatter_tokens(new_cache["k"][i], k_write)
+        vc = scatter_tokens(new_cache["v"][i], v_write)
+        new_cache["k"] = list(new_cache["k"])
+        new_cache["v"] = list(new_cache["v"])
+        new_cache["k"][i] = kc
+        new_cache["v"][i] = vc
+        pyramid = None
+        if "pyr_k" in new_cache:
+            npages = new_cache["pyr_k"][i].shape[2]
+            page = (positions // bs) % npages  # (B, C)
+            # dense one-hot token->page map: deterministic segment-sum (no
+            # scatter-add ordering concerns), npages is small
+            ind = ((page[:, :, None] == jnp.arange(npages)) & tv[:, :, None])
+            ind = ind.astype(jnp.float32)
+            pk = new_cache["pyr_k"][i] + jnp.einsum(
+                "bcy,bhcd->bhyd", ind, k_new.astype(jnp.float32))
+            pv = new_cache["pyr_v"][i] + jnp.einsum(
+                "bcy,bhcd->bhyd", ind, v_new.astype(jnp.float32))
+            new_cache["pyr_k"] = list(new_cache["pyr_k"])
+            new_cache["pyr_v"] = list(new_cache["pyr_v"])
+            new_cache["pyr_k"][i] = pk
+            new_cache["pyr_v"][i] = pv
+            pyramid = PyramidState(pk, pv)
+            if i == 0 and paged:  # page table is shared across layers
+                touched = jnp.any(ind > 0, axis=1)  # (B, npages)
+                blk_new = jnp.max(
+                    jnp.where(ind > 0, (positions // bs)[:, :, None], -1),
+                    axis=1).astype(jnp.int32)
+                new_cache["page_blocks"] = jnp.where(
+                    touched, blk_new, new_cache["page_blocks"])
+        o = chunk_attention(
+            q, kc, vc, lengths_new, positions, cfg.attn_spec, pyramid=pyramid,
+            page_blocks=new_cache.get("page_blocks"), k_scale=ks, v_scale=vs)
+        if cfg.padded_heads != cfg.num_heads:
+            o = o * L.head_mask(cfg)[None, :, None, None].astype(o.dtype)
+        x = x + jnp.einsum("bhsk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))
+        h = L.apply_norm(x, p["ln2"], cfg)
+        if "moe" in p:
+            mo, _ = moe_block(h, p["moe"], cfg)
+            x = x + mo
+        else:
+            x = x + L.mlp_block(h, p["mlp"], cfg)
+    x = L.apply_norm(x, params["ln_f"], cfg)
+    last = jnp.clip(num_valid - 1, 0, C - 1)
+    x_last = x[jnp.arange(B), last]  # (B, d)
+    logits = L.unembed(x_last[:, None], params["embed"], cfg)[:, 0]
+    new_cache["lengths"] = lengths_new
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, active=None):
+    """One decode step. tokens (B,) int32 -> (logits (B,V), cache).
+
+    ``active`` (B,) bool restricts the step to a subset of slots: inactive
+    slots' cache rows (KV, scales, pyramid, page table, length) are preserved
+    bit-for-bit so ragged continuous batching cannot perturb them, and their
+    logits are garbage to be ignored by the caller. ``None`` = all active.
+
+    With a ring-paged cache (``page_blocks`` present, DESIGN.md §9) the write
+    position wraps modulo the physical cache, recycling the oldest
+    background block once a slot's length exceeds the cache capacity.
+    """
     B = tokens.shape[0]
-    lengths = cache["lengths"] + 1  # includes the new token
+    act = jnp.ones((B,), bool) if active is None else active
+    lengths = cache["lengths"] + act.astype(cache["lengths"].dtype)
     x = L.embed(tokens[:, None], params["embed"], cfg)
     new_cache = dict(cache)
     b_idx = jnp.arange(B)
+    paged = "page_blocks" in cache
+    pos = lengths - 1  # the new token's global position (active slots)
+    am2 = act[:, None]          # (B, 1)
+    am3 = act[:, None, None]    # (B, 1, 1)
     for i, p in enumerate(_layers_iter(params, cfg)):
         h = L.apply_norm(x, p["ln1"], cfg)
-        positions = (lengths - 1)[:, None]
-        q, k_new, v_new = L.qkv_project(h, p["attn"], cfg, positions)
+        q, k_new, v_new = L.qkv_project(h, p["attn"], cfg, pos[:, None])
+        S_phys = new_cache["k"][i].shape[2]
+        widx = pos % S_phys if paged else pos
         ks = vs = None
         if "k_scale" in new_cache:  # int8 KV cache (§Perf Y3)
             from repro.core.mra_decode import quantize_kv
@@ -276,36 +412,48 @@ def decode_step(params, cfg: ModelConfig, cache, tokens):
             vq, vsc = quantize_kv(v_new[:, :, 0])
             new_cache["k_scale"] = list(new_cache["k_scale"])
             new_cache["v_scale"] = list(new_cache["v_scale"])
-            ks = new_cache["k_scale"][i].at[b_idx, :, lengths - 1].set(ksc)
-            vs = new_cache["v_scale"][i].at[b_idx, :, lengths - 1].set(vsc)
+            ks = new_cache["k_scale"][i]
+            vs = new_cache["v_scale"][i]
+            ks = ks.at[b_idx, :, widx].set(jnp.where(am2, ksc, ks[b_idx, :, widx]))
+            vs = vs.at[b_idx, :, widx].set(jnp.where(am2, vsc, vs[b_idx, :, widx]))
             new_cache["k_scale"][i] = ks
             new_cache["v_scale"][i] = vs
             k_write, v_write = kq, vq
         else:
             k_write = k_new[:, :, 0].astype(new_cache["k"][i].dtype)
             v_write = v_new[:, :, 0].astype(new_cache["v"][i].dtype)
-        kc = new_cache["k"][i].at[b_idx, :, lengths - 1].set(k_write)
-        vc = new_cache["v"][i].at[b_idx, :, lengths - 1].set(v_write)
+        kc = new_cache["k"][i]
+        vc = new_cache["v"][i]
+        kc = kc.at[b_idx, :, widx].set(jnp.where(am3, k_write, kc[b_idx, :, widx]))
+        vc = vc.at[b_idx, :, widx].set(jnp.where(am3, v_write, vc[b_idx, :, widx]))
         new_cache["k"] = list(new_cache["k"])
         new_cache["v"] = list(new_cache["v"])
         new_cache["k"][i] = kc
         new_cache["v"][i] = vc
         pyramid = None
         if "pyr_k" in new_cache:
+            from repro.core.mra_decode import ring_pyramid_update
+
             bs = cfg.attention.block_size
-            blk = (lengths - 1) // bs
-            pk = new_cache["pyr_k"][i].at[b_idx, :, blk].add(
-                k_new[:, :, 0].astype(jnp.float32)
-            )
-            pv = new_cache["pyr_v"][i].at[b_idx, :, blk].add(
-                v_new[:, :, 0].astype(jnp.float32)
-            )
+            pb = new_cache["page_blocks"] if paged else None
+            if paged:
+                pyramid, pb = ring_pyramid_update(
+                    PyramidState(new_cache["pyr_k"][i], new_cache["pyr_v"][i]),
+                    pb, k_new[:, :, 0], v_new[:, :, 0], pos, bs, active=act)
+                new_cache["page_blocks"] = pb
+            else:
+                blk = pos // bs
+                contrib_k = jnp.where(am3, k_new[:, :, 0].astype(jnp.float32), 0.0)
+                contrib_v = jnp.where(am3, v_new[:, :, 0].astype(jnp.float32), 0.0)
+                pyramid = PyramidState(
+                    new_cache["pyr_k"][i].at[b_idx, :, blk].add(contrib_k),
+                    new_cache["pyr_v"][i].at[b_idx, :, blk].add(contrib_v))
             new_cache["pyr_k"] = list(new_cache["pyr_k"])
             new_cache["pyr_v"] = list(new_cache["pyr_v"])
-            new_cache["pyr_k"][i] = pk
-            new_cache["pyr_v"][i] = pv
-            pyramid = PyramidState(pk, pv)
+            new_cache["pyr_k"][i] = pyramid.k_sum
+            new_cache["pyr_v"][i] = pyramid.v_sum
         o = decode_attention(q, kc, vc, lengths, cfg.attn_spec, pyramid=pyramid,
+                             page_blocks=new_cache.get("page_blocks"),
                              k_scale=ks, v_scale=vs)
         if cfg.padded_heads != cfg.num_heads:
             o = o * L.head_mask(cfg)[None, :, None, None].astype(o.dtype)

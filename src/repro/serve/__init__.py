@@ -1,1 +1,15 @@
-from .engine import Engine, Request, make_prefill, make_serve_step
+from .engine import Engine
+from .kv_cache import RingPagedKVCache
+from .sampling import SamplingParams, sample, sample_batch
+from .scheduler import Request, Scheduler, SlotState
+
+__all__ = [
+    "Engine",
+    "Request",
+    "RingPagedKVCache",
+    "SamplingParams",
+    "Scheduler",
+    "SlotState",
+    "sample",
+    "sample_batch",
+]

@@ -1,16 +1,31 @@
-"""Serving engine: prefill + decode with slot-based continuous batching.
+"""Serving engine: ragged continuous batching with chunked prefill + sampling.
 
-``serve_step`` (one decode step for a full batch of active slots) is the
-function the decode-shape dry-runs lower. The Engine wraps it with a simple
-continuous-batching scheduler: fixed number of slots, finished sequences are
-replaced from the pending queue between steps — the standard
-production-serving shape (vLLM-style, without paged attention since the MRA
-pyramid gives us block-granular access already).
+The production-serving loop (DESIGN.md §9). Per engine iteration:
+
+  1. admission — pending requests bind to FREE slots; the slot's cache rows
+     are reset bit-exactly (kv_cache.RingPagedKVCache).
+  2. chunked prefill — ONE jitted ``prefill_chunk`` dispatch advances every
+     PREFILL slot by up to ``chunk`` prompt tokens (ragged ``num_valid``),
+     writing KV + pyramid block sums directly. O(ceil(P/chunk)) dispatches
+     per prompt instead of the O(P) per-token decode replays of the old
+     engine. Slots whose prompt completes sample their first token from the
+     chunk's last-position logits.
+  3. decode — ONE jitted ``decode_step`` + fused ``sample_batch`` dispatch
+     advances every DECODE slot (active-masked: other slots' state is
+     untouched bit-for-bit), each at its own ragged length.
+
+Slots never wait for each other: a slot can decode while its neighbor is
+mid-prefill, and finished slots readmit immediately. With ``mesh`` set the
+engine serves tensor-parallel (params/KV/pyramid placed by ParamSpec axes;
+attention through shard_map when ``cfg.attn_shard``). ``Engine.stats``
+counts jitted dispatches and per-step latencies for benchmarks/serve_bench.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional
+import collections
+import functools
+import time
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -20,112 +35,156 @@ from repro.configs.base import ModelConfig
 from repro.distributed import mesh_utils
 from repro.models import get_model
 
+from .kv_cache import RingPagedKVCache
+from .sampling import SamplingParams, greedy_batch, sample_batch
+from .scheduler import Request, Scheduler
 
-@dataclasses.dataclass
-class Request:
-    prompt: np.ndarray  # (S,) int32
-    max_new_tokens: int = 16
-    out: Optional[np.ndarray] = None
+__all__ = ["Engine", "Request", "SamplingParams"]
 
 
-def make_serve_step(cfg: ModelConfig):
+@functools.lru_cache(maxsize=None)
+def _make_engine_fns(cfg: ModelConfig):
+    """Jitted (prefill_chunk, decode+sample, sample) for a config.
+
+    Cached on the (frozen, hashable) ModelConfig so every Engine instance for
+    the same config shares compiled executables.
+    """
     model = get_model(cfg)
+    if not hasattr(model, "prefill_chunk"):
+        raise NotImplementedError(
+            f"family {cfg.family!r} does not expose prefill_chunk; the "
+            "continuous-batching engine serves the transformer families")
 
-    def serve_step(params, cache, tokens):
-        return model.decode_step(params, cfg, cache, tokens)
+    def prefill_chunk(params, cache, tokens, num_valid):
+        return model.prefill_chunk(params, cfg, cache, tokens, num_valid)
 
-    return serve_step
+    def decode_and_sample(params, cache, tokens, active, any_sampling, temp,
+                          top_k, top_p, seed, step):
+        logits, cache = model.decode_step(params, cfg, cache, tokens,
+                                          active=active)
+        # all-greedy batches (the common case) skip the sort/softmax/cumsum
+        # sampling pipeline entirely; greedy_batch is sample_batch's own
+        # temperature == 0 path, so the token is identical either way
+        nxt = jax.lax.cond(
+            any_sampling,
+            lambda lg: sample_batch(lg, temp, top_k, top_p, seed, step,
+                                    vocab=cfg.vocab),
+            lambda lg: greedy_batch(lg, vocab=cfg.vocab),
+            logits)
+        return jnp.where(active, nxt, tokens), cache
 
+    def sample_only(logits, any_sampling, temp, top_k, top_p, seed, step):
+        return jax.lax.cond(
+            any_sampling,
+            lambda lg: sample_batch(lg, temp, top_k, top_p, seed, step,
+                                    vocab=cfg.vocab),
+            lambda lg: greedy_batch(lg, vocab=cfg.vocab),
+            logits)
 
-def make_prefill(cfg: ModelConfig):
-    model = get_model(cfg)
-
-    def prefill(params, batch, cache):
-        return model.prefill(params, cfg, batch, cache)
-
-    return prefill
+    return jax.jit(prefill_chunk), jax.jit(decode_and_sample), jax.jit(sample_only)
 
 
 class Engine:
     """Batched request server over ``slots`` concurrent sequences.
 
-    With ``mesh`` set, the engine serves tensor-parallel: parameters and the
-    decode state (KV cache, pyramid block sums, dequant scales) are placed by
-    their ParamSpec logical axes — batch/slots over the data axes, kv-heads
-    over the model axis — and the decode step runs under the mesh so
-    ``cfg.attn_shard`` routes attention through shard_map (DESIGN.md §8).
+    max_len: per-slot cache window. For MRA attention this is the ring
+      capacity (must divide into pyramid blocks): prompts must fit, but
+      generation beyond it evicts the oldest background pages instead of
+      failing. For dense attention kinds it is a hard prompt+generation cap.
+    chunk: prefill chunk size (tokens per slot per prefill dispatch).
+
+    Serves the transformer token-LM families (dense/moe): chunked prefill
+    requires ``prefill_chunk`` and slot isolation requires active-masked
+    ``decode_step``, neither of which the recurrent families (rwkv6,
+    recurrentgemma) implement — the old engine's decode-replay prefill
+    "supported" them only by advancing every slot's recurrent state at once
+    (the cross-slot corruption this rewrite removes). Unsupported families
+    raise NotImplementedError at construction.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 512, mesh=None):
-        from repro.models.params import init_params as build
-
+                 max_len: int = 512, chunk: int = 32, mesh=None):
         self.cfg = cfg
         self.model = get_model(cfg)
         self.slots = slots
         self.max_len = max_len
+        self.chunk = min(chunk, max_len)
         self.mesh = mesh
-        cache_specs = self.model.cache_specs(cfg, slots, max_len)
-        self.cache = build(cache_specs, jax.random.PRNGKey(0))  # zeros-init specs
+        self.kv = RingPagedKVCache(cfg, self.model, slots, max_len, mesh=mesh)
         if mesh is not None:
             from repro.models.params import param_shardings
 
             params = jax.tree.map(
                 jax.device_put, params,
-                param_shardings(self.model.param_specs(cfg), mesh),
-            )
-            self.cache = jax.tree.map(
-                jax.device_put, self.cache, param_shardings(cache_specs, mesh)
-            )
+                param_shardings(self.model.param_specs(cfg), mesh))
         self.params = params
-        self._decode = jax.jit(make_serve_step(cfg))
-        self.active: List[Optional[Request]] = [None] * slots
-        self.tokens = np.zeros((slots,), np.int32)
-        self.remaining = np.zeros((slots,), np.int64)
+        self._prefill, self._decode, self._sample = _make_engine_fns(cfg)
+        self.reset_stats()
 
-    def _step(self, tokens):
-        """One jitted decode step under the engine's mesh (if any)."""
+    def reset_stats(self) -> None:
+        """Zero the dispatch/latency counters (e.g. after jit warmup)."""
+        self.stats = {
+            "prefill_dispatches": 0,
+            "decode_dispatches": 0,
+            "prefill_tokens": 0,
+            "generated_tokens": 0,
+            "requests_completed": 0,
+            # bounded: a long-lived engine must not grow host memory per step
+            "decode_step_seconds": collections.deque(maxlen=4096),
+        }
+
+    # ------------------------------------------------------------------ #
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve ``requests`` to completion; returns them with ``out`` filled
+        (completion order, which may differ from submission order)."""
+        sched = Scheduler(self.slots, self.kv.capacity, self.chunk,
+                          ring=self.kv.paged)
+        for r in requests:
+            sched.submit(r)
         with mesh_utils.use_mesh(self.mesh):
-            logits, self.cache = self._decode(self.params, self.cache, tokens)
-        return logits
+            while sched.busy():
+                self._iterate(sched)
+        self.stats["requests_completed"] += len(sched.done)
+        return sched.done
 
-    def _prefill_one(self, slot: int, req: Request):
-        """Sequential per-slot prefill via decode steps (simple & correct)."""
-        toks = req.prompt.astype(np.int32)
-        logits = None
-        for t in toks:
-            batch_tok = jnp.asarray(self.tokens)
-            batch_tok = batch_tok.at[slot].set(int(t))
-            logits = self._step(batch_tok)
-        if logits is not None:
-            self.tokens[slot] = int(jnp.argmax(logits[slot]))
-        # empty prompt: keep the slot's current token as the seed
-        req.out = np.array([], np.int32)
-        self.remaining[slot] = req.max_new_tokens
+    # ------------------------------------------------------------------ #
+    def _iterate(self, sched: Scheduler) -> None:
+        newly = sched.admit()
+        if newly:
+            mask = np.zeros((self.slots,), bool)
+            mask[newly] = True
+            self.kv.reset_slots(mask)
 
-    def run(self, requests: List[Request], *, greedy: bool = True):
-        """Process all requests; returns the list with ``out`` filled."""
-        pending = list(requests)
-        done: List[Request] = []
-        # NOTE: per-slot prefill here advances the *whole* batch cache; for the
-        # framework's purposes (tests/examples) slots are filled one wave at a
-        # time so lengths stay aligned per wave.
-        while pending or any(a is not None for a in self.active):
-            for s in range(self.slots):
-                if self.active[s] is None and pending:
-                    req = pending.pop(0)
-                    self.active[s] = req
-                    self._prefill_one(s, req)
-            logits = self._step(jnp.asarray(self.tokens))
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
-            for s in range(self.slots):
-                req = self.active[s]
-                if req is None:
-                    continue
-                req.out = np.append(req.out, self.tokens[s])
-                self.tokens[s] = nxt[s]
-                self.remaining[s] -= 1
-                if self.remaining[s] <= 0:
-                    done.append(req)
-                    self.active[s] = None
-        return done
+        plan = sched.prefill_plan()
+        if plan is not None:
+            tokens, num_valid, finishing = plan
+            logits, self.kv.tree = self._prefill(
+                self.params, self.kv.tree, jnp.asarray(tokens),
+                jnp.asarray(num_valid))
+            self.stats["prefill_dispatches"] += 1
+            self.stats["prefill_tokens"] += int(num_valid.sum())
+            if finishing:
+                first = self._sample(
+                    logits, jnp.asarray(sched.any_sampling(finishing)),
+                    *map(jnp.asarray, sched.sampler_arrays()))
+                first = np.asarray(first)
+                for s in finishing:
+                    sched.on_sampled(s, first[s])
+                    self.stats["generated_tokens"] += 1
+
+        active = sched.decode_mask()
+        if active.any():
+            t0 = time.perf_counter()
+            feed = sched.feed_tokens()
+            temp, top_k, top_p, seed, step = sched.sampler_arrays()
+            nxt, self.kv.tree = self._decode(
+                self.params, self.kv.tree, jnp.asarray(feed),
+                jnp.asarray(active), jnp.asarray(sched.any_sampling()),
+                jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
+                jnp.asarray(seed), jnp.asarray(step))
+            nxt = np.asarray(nxt)
+            self.stats["decode_dispatches"] += 1
+            for s in np.flatnonzero(active):
+                sched.on_sampled(int(s), nxt[s])
+                self.stats["generated_tokens"] += 1
+            self.stats["decode_step_seconds"].append(time.perf_counter() - t0)

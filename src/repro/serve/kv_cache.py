@@ -1,0 +1,109 @@
+"""Ring-paged KV cache manager for the serving engine.
+
+The cache is block-granular: physical pages are ``cfg.attention.block_size``
+tokens, i.e. exactly the MRA pyramid's blocks — the pyramid block sums ARE
+the page table payload (one (B, nb) int32 table of logical block owners,
+shared by every layer, plus per-layer k/v/pyr tensors declared by
+``model.cache_specs``). Position ``p`` of a slot lives at physical index
+``p % capacity``; once a slot's stream exceeds the capacity, appending
+recycles the oldest background page (ring eviction) while
+``mra2_decode_attention`` keeps selecting its top-m blocks among the live
+pages. Non-MRA attention kinds get the same storage without a page table
+(dense, hard capacity).
+
+This module owns the engine-side lifecycle: building/placing the cache tree,
+bit-exact per-slot reset on admission, and occupancy introspection. The
+ring/page *math* lives with the attention code (core/mra_decode.py) so the
+model layer never imports serve/.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.mra_decode import quantize_kv  # re-export: page quantization
+from repro.models.params import init_params, param_shardings
+
+__all__ = ["RingPagedKVCache", "quantize_kv"]
+
+
+@functools.lru_cache(maxsize=None)
+def _make_reset(paged: bool):
+    """Jitted bit-exact slot reset: zero the rows selected by ``mask``.
+
+    Only the *validity* state is cleared (lengths, page table, pyramid block
+    sums); stale K/V bytes are unreachable once no live page maps to them, so
+    they are left in place — same trick as the dense path's length masking.
+    """
+
+    def reset(cache, mask):
+        c = dict(cache)
+        c["lengths"] = jnp.where(mask, 0, cache["lengths"])
+        if paged:
+            c["page_blocks"] = jnp.where(
+                mask[:, None], jnp.int32(-1), cache["page_blocks"])
+        if "pyr_k" in c:
+            m4 = mask[:, None, None, None]
+            c["pyr_k"] = [jnp.where(m4, 0.0, a) for a in cache["pyr_k"]]
+            c["pyr_v"] = [jnp.where(m4, 0.0, a) for a in cache["pyr_v"]]
+        return c
+
+    return jax.jit(reset)
+
+
+class RingPagedKVCache:
+    """Engine-side decode state: KV pages + pyramid + page table + lengths.
+
+    With ``mesh`` set, every tensor is placed by its ParamSpec logical axes
+    (slots over the data axes, kv-heads over the model axis) so the decode
+    and chunked-prefill steps run tensor-parallel (DESIGN.md §8/§9).
+    """
+
+    def __init__(self, cfg: ModelConfig, model, slots: int, max_len: int,
+                 mesh=None):
+        if cfg.attention.kind in ("mra2", "mra2_s"):
+            if max_len % cfg.attention.block_size != 0:
+                raise ValueError(
+                    f"max_len {max_len} must be a multiple of the MRA block "
+                    f"size {cfg.attention.block_size} (pages are blocks)")
+        self.cfg = cfg
+        self.slots = slots
+        self.capacity = max_len
+        self.specs = model.cache_specs(cfg, slots, max_len)
+        self.paged = "page_blocks" in self.specs
+        self.block = cfg.attention.block_size if self.paged else None
+        self.pages = max_len // cfg.attention.block_size if self.paged else None
+        self.quantized = "k_scale" in self.specs
+        self.tree = init_params(self.specs, jax.random.PRNGKey(0))
+        if mesh is not None:
+            self.tree = jax.tree.map(
+                jax.device_put, self.tree, param_shardings(self.specs, mesh))
+        self._reset = _make_reset(self.paged)
+
+    def reset_slots(self, mask: np.ndarray):
+        """Clear the slots selected by ``mask`` (B,) bool for re-admission."""
+        self.tree = self._reset(self.tree, jnp.asarray(mask))
+
+    @property
+    def lengths(self) -> np.ndarray:
+        return np.asarray(self.tree["lengths"])
+
+    def live_pages(self) -> Optional[np.ndarray]:
+        """(B,) live (non-evicted) page count per slot; None when dense."""
+        if not self.paged:
+            return None
+        return np.asarray((np.asarray(self.tree["page_blocks"]) >= 0).sum(-1))
+
+    def window_start(self) -> np.ndarray:
+        """(B,) oldest position still attendable (0 until eviction kicks in)."""
+        if not self.paged:
+            return np.zeros((self.slots,), np.int64)
+        pb = np.asarray(self.tree["page_blocks"]).astype(np.int64)
+        oldest = np.where(pb >= 0, pb, np.iinfo(np.int64).max).min(-1)
+        oldest = np.where((pb >= 0).any(-1), oldest, 0)
+        return oldest * self.block

@@ -1,0 +1,124 @@
+"""Token sampling for the serving engine: greedy / temperature / top-k / top-p.
+
+Per-request parameters travel as ``SamplingParams`` on the ``Request``; the
+engine materializes them as per-slot arrays so one jitted ``sample_batch``
+serves every slot regardless of its sampler settings (greedy is
+``temperature == 0``).
+
+Determinism contract (pinned by tests/test_engine.py): the PRNG key for a
+request's ``i``-th sampled token is ``fold_in(PRNGKey(seed), i)`` — a pure
+function of the request's seed and the token index, never of the slot it
+landed in, the batch around it, or wall-clock state. Batched engine output is
+therefore bit-identical to a single-request run with the same seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mra import NEG_INF
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    temperature: 0 (or negative) = greedy argmax; > 0 = softmax sampling.
+    top_k: keep only the k highest logits (0 = disabled).
+    top_p: nucleus sampling — keep the smallest prefix of the sorted
+      distribution with cumulative probability >= top_p (1.0 = disabled).
+    seed: request-level PRNG seed (see determinism contract above).
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+
+GREEDY = SamplingParams()
+
+
+def request_key(seed, step):
+    """PRNG key for a request's ``step``-th sampled token."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), step)
+
+
+def _masked_logits(logits, vocab):
+    lf = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    if vocab is not None and vocab < V:
+        lf = jnp.where(jnp.arange(V) < vocab, lf, NEG_INF)
+    return lf
+
+
+def greedy_batch(logits, *, vocab=None):
+    """Vocab-masked argmax — the sampler's temperature == 0 path, exactly.
+
+    Split out so the engine's greedy fast path (no sort/softmax/cumsum per
+    decode step) provably returns the same token ``sample_batch`` would.
+    """
+    return jnp.argmax(_masked_logits(logits, vocab), axis=-1).astype(jnp.int32)
+
+
+def sample_batch(logits, temperature, top_k, top_p, seed, step, *, vocab=None):
+    """Sample one token per slot. All sampler params are per-slot arrays.
+
+    Args:
+      logits: (B, V) next-token logits (V may include vocab padding).
+      temperature/top_p: (B,) float32; top_k/seed/step: (B,) int32.
+      vocab: real vocab size — padded logit columns are masked out.
+
+    Returns:
+      (B,) int32 sampled token ids.
+    """
+    B, V = logits.shape
+    lf = _masked_logits(logits, vocab)
+    greedy_tok = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+
+    scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
+    # top-k: mask everything below the k-th largest logit (ties are kept —
+    # deterministic, and the categorical renormalizes anyway); k <= 0 disables
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    k = jnp.where(top_k > 0, jnp.clip(top_k, 1, V), V)
+    kth = jnp.take_along_axis(sorted_desc, k[:, None] - 1, axis=-1)  # (B, 1)
+    scaled = jnp.where(scaled >= kth, scaled, NEG_INF)
+    # top-p over the top-k-filtered distribution: keep the smallest sorted
+    # prefix whose cumulative probability reaches top_p (the argmax is always
+    # kept, so top_p -> 0 degenerates to greedy). Top-k masking only replaces
+    # the tail of the descending order with NEG_INF, so the filtered sorted
+    # view is derivable from the first sort — no second O(V log V) sort on
+    # the per-token serving hot path.
+    sdesc = jnp.where(jnp.arange(V)[None, :] < k[:, None], sorted_desc, NEG_INF)
+    p_sorted = jax.nn.softmax(sdesc, axis=-1)
+    csum = jnp.cumsum(p_sorted, axis=-1)
+    keep = (csum - p_sorted) < top_p[:, None]  # (B, V) in sorted order
+    # top_p <= 0 keeps nothing above; clamp so the argmax always survives
+    # (top_p -> 0 then degenerates to greedy instead of disabling the filter)
+    n_keep = jnp.maximum(jnp.sum(keep, axis=-1).astype(jnp.int32), 1)
+    cutoff = jnp.take_along_axis(sdesc, n_keep[:, None] - 1, axis=-1)
+    scaled = jnp.where(scaled >= cutoff, scaled, NEG_INF)
+
+    keys = jax.vmap(request_key)(seed, step)
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy_tok, sampled)
+
+
+def sample(logits, params: SamplingParams, step: int, *, vocab=None):
+    """Single-sequence reference sampler: logits (V,) -> int32 token.
+
+    Thin wrapper over ``sample_batch`` with B == 1 so conformance tests and
+    batched serving share one code path by construction.
+    """
+    out = sample_batch(
+        logits[None, :],
+        jnp.asarray([params.temperature], jnp.float32),
+        jnp.asarray([params.top_k], jnp.int32),
+        jnp.asarray([params.top_p], jnp.float32),
+        jnp.asarray([params.seed], jnp.int32),
+        jnp.asarray([step], jnp.int32),
+        vocab=vocab,
+    )
+    return out[0]

@@ -211,3 +211,28 @@ def op_loss_normalized(fn, w):
         return jnp.sum(w * o / rsum[..., None])
 
     return loss
+
+
+# --------------------------------------------------------------------------- #
+# Fake-mesh subprocess runner (shared by the shard-marker suites)
+# --------------------------------------------------------------------------- #
+# The fake-device flag must be set before jax initializes, so shard-parity
+# tests run their payloads in fresh subprocesses under one shared env
+# (tests/test_shard_parity.py, tests/test_engine.py).
+import os
+import subprocess
+import sys
+import textwrap
+
+FAKE_MESH_ENV = {**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu",
+                 "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+
+
+def run_in_fake_mesh(code: str, timeout: int = 600) -> str:
+    """Run ``code`` in a subprocess with 8 fake CPU devices; returns stdout."""
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=FAKE_MESH_ENV,
+                       cwd=os.path.dirname(os.path.dirname(__file__)),
+                       timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout

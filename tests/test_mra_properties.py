@@ -87,6 +87,96 @@ def test_softmax_shift_invariance(seed):
     np.testing.assert_allclose(np.asarray(out), np.asarray(uniform), atol=1e-4)
 
 
+# --------------------------------------------------------------------------- #
+# Decode-side invariants: the incremental pyramid and the int8 KV cache
+# --------------------------------------------------------------------------- #
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8, 16]),
+       st.integers(1, 48))
+def test_pyramid_incremental_append_equals_recompute(seed, block, n_tokens):
+    """Incremental ``PyramidState.append`` over any position sequence is
+    exactly the block sums recomputed from the cache (same fp32 adds)."""
+    from repro.core.mra_decode import PyramidState
+
+    r = np.random.default_rng(seed)
+    B, Hkv, D, nb = 2, 2, 4, 4
+    S = nb * block
+    n = min(n_tokens, S)
+    ks = r.standard_normal((B, Hkv, n, D)).astype(np.float32)
+    vs = r.standard_normal((B, Hkv, n, D)).astype(np.float32)
+    # per-slot ragged positions: slot b appends its first n_b tokens
+    n_per = np.asarray([n, max(1, n // 2)])
+    pyr = PyramidState.init(B, Hkv, nb, D)
+    cache_k = np.zeros((B, Hkv, S, D), np.float32)
+    cache_v = np.zeros((B, Hkv, S, D), np.float32)
+    for t in range(n):
+        pos = np.minimum(t, n_per - 1)  # finished slots re-write their last
+        active = t < n_per
+        kn = np.where(active[:, None, None], ks[:, :, t], 0.0)
+        vn = np.where(active[:, None, None], vs[:, :, t], 0.0)
+        for b in range(B):
+            if active[b]:
+                cache_k[b, :, pos[b]] = kn[b]
+                cache_v[b, :, pos[b]] = vn[b]
+        pyr = pyr.append(jnp.asarray(kn), jnp.asarray(vn),
+                         jnp.asarray(pos), block)
+    # recompute-from-cache reference (what mra2_decode_attention does when no
+    # pyramid is passed)
+    ref_k = cache_k.reshape(B, Hkv, nb, block, D).sum(3)
+    ref_v = cache_v.reshape(B, Hkv, nb, block, D).sum(3)
+    np.testing.assert_allclose(np.asarray(pyr.k_sum), ref_k, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(pyr.v_sum), ref_v, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([8, 16]),
+       st.integers(20, 90))
+def test_ring_pyramid_update_equals_recompute_over_window(seed, block, total):
+    """Ring-paged incremental updates == block sums recomputed from the live
+    window, for any stream length (including multiple wraps/evictions)."""
+    from repro.core.mra_decode import PyramidState, ring_pyramid_update
+
+    r = np.random.default_rng(seed)
+    B, Hkv, D, nb = 2, 2, 4, 3
+    S = nb * block
+    ks = r.standard_normal((B, Hkv, total, D)).astype(np.float32)
+    vs = r.standard_normal((B, Hkv, total, D)).astype(np.float32)
+    pyr = PyramidState.init(B, Hkv, nb, D)
+    pb = jnp.full((B, nb), -1, jnp.int32)
+    for p in range(total):
+        pyr, pb = ring_pyramid_update(
+            pyr, pb, jnp.asarray(ks[:, :, p]), jnp.asarray(vs[:, :, p]),
+            jnp.full((B,), p, jnp.int32), block)
+    pb_np = np.asarray(pb)
+    for page in range(nb):
+        blk = pb_np[0, page]
+        lo, hi = blk * block, min((blk + 1) * block, total)
+        np.testing.assert_allclose(
+            np.asarray(pyr.k_sum)[:, :, page], ks[:, :, lo:hi].sum(2), atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(pyr.v_sum)[:, :, page], vs[:, :, lo:hi].sum(2), atol=1e-5)
+    # the live pages hold exactly the newest (up to nb) blocks of the stream
+    expect_newest = (total - 1) // block
+    assert pb_np.max() == expect_newest
+    live = np.sort(pb_np[0][pb_np[0] >= 0])
+    expected = np.arange(max(0, expect_newest - nb + 1), expect_newest + 1)
+    np.testing.assert_array_equal(live, expected)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
+def test_quantize_kv_roundtrip_within_int8_bound(seed, amplitude):
+    """quantize -> dequantize error stays within the per-token int8 bound the
+    decode path relies on: |x - x_hat| <= scale / 2 = amax / 254 per token."""
+    from repro.core.mra_decode import quantize_kv
+
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((2, 3, 8, 16)) * amplitude, jnp.float32)
+    q, s = quantize_kv(x)
+    assert q.dtype == jnp.int8
+    back = q.astype(jnp.float32) * s[..., None]
+    err = np.asarray(jnp.abs(back - x))
+    bound = np.asarray(s)[..., None] * 0.5 + 1e-7
+    assert (err <= bound).all()
+
+
 @given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]))
 def test_head_permutation_equivariance(seed, Hkv):
     """Permuting heads permutes outputs identically."""
