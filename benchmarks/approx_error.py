@@ -93,6 +93,30 @@ def run(emit):
 
     # Fig. 4 / Tab. 7 protocol: error + runtime per method at N=512
     q, k, v = structured_qkv(rng, B=1, H=8, N=512, D=64)
+    # coarse-only fidelity (DESIGN.md §10): the speculative draft attends its
+    # own block exactly and everything else through the pyramid sums alone —
+    # this error is what bounds the draft's acceptance rate
+    spec_c = AttentionSpec(kind="mra2", block_size=32, coarse_only=True)
+    us = time_call(lambda q, k, v: self_attention(q, k, v, spec_c), q, k, v)
+    err = rel_error(self_attention(q, k, v, spec_c), q, k, v)
+    emit("mra2_coarse_only_n512", us, f"{err:.4f}")
+    # same comparison on the decode path the draft actually runs: one query
+    # against a 512-token cache, coarse-only vs the exact decode oracle
+    from repro.core.mra import MraConfig
+    from repro.core.mra_decode import (full_decode_attention,
+                                       mra2_coarse_decode_attention)
+
+    qd = q[:, :, -1:, :]
+    lengths = np.full((q.shape[0],), q.shape[2], np.int32)
+    mcfg = MraConfig(block_size=32, causal=True)
+    approx = mra2_coarse_decode_attention(qd, k, v, lengths, mcfg)
+    exact = full_decode_attention(qd, k, v, lengths)
+    err_d = float(np.linalg.norm(np.asarray(approx) - np.asarray(exact))
+                  / (np.linalg.norm(np.asarray(exact)) + 1e-9))
+    us = time_call(
+        lambda q_, k_, v_: mra2_coarse_decode_attention(q_, k_, v_, lengths, mcfg),
+        qd, k, v)
+    emit("mra2_coarse_decode_n512", us, f"{err_d:.4f}")
     for bpr in (1, 2, 4, 8):
         cfg = MraConfig(block_size=32, blocks_per_row=bpr)
         us = time_call(lambda q, k, v: mra2_attention(q, k, v, cfg), q, k, v)

@@ -12,6 +12,11 @@ mirror them to a JSON file (``--json``) for the CI perf-trajectory artifact.
   kernel_bench  -> fwd+bwd Pallas-kernel vs jnp path timing + grad parity
   serve_bench   -> continuous-batching engine (req/s, tok/s, inter-token
                    latency p50/p99, chunked-prefill dispatch economy)
+  spec_bench    -> resolution-speculative decoding (acceptance rate vs K,
+                   accepted-tokens-per-dispatch, tok/s vs PR 3 baseline)
+
+``--list`` prints the registered benchmark names (one per line) and exits,
+so CI scripts enumerate instead of hard-coding.
 
 ``--mesh DxM`` (default "1": no mesh) activates a (data, model) device mesh
 for the run: modules read it via ``mesh_utils.get_mesh()`` and place/shard
@@ -23,32 +28,47 @@ import argparse
 import json
 import sys
 
+# registry: name -> module basename under benchmarks/ (kept import-free so
+# ``--list`` answers without pulling in jax)
+MODULES = (
+    "approx_error",
+    "entropy_error",
+    "scaling",
+    "swap_eval",
+    "decode_bench",
+    "kernel_bench",
+    "serve_bench",
+    "spec_bench",
+)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated module subset")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered benchmark names and exit")
     ap.add_argument("--mesh", default="1",
                     help="device mesh 'D' or 'DxM' (default: 1 = no mesh)")
     ap.add_argument("--json", default=None,
                     help="also write results to this JSON file (CI artifact)")
     args = ap.parse_args()
 
+    if args.list:
+        print("\n".join(MODULES))
+        return
+
+    import importlib
+
     from repro.distributed import mesh_utils
     from repro.launch.mesh import parse_mesh
 
-    from . import (approx_error, decode_bench, entropy_error, kernel_bench,
-                   scaling, serve_bench, swap_eval)
-
-    modules = {
-        "approx_error": approx_error,
-        "entropy_error": entropy_error,
-        "scaling": scaling,
-        "swap_eval": swap_eval,
-        "decode_bench": decode_bench,
-        "kernel_bench": kernel_bench,
-        "serve_bench": serve_bench,
-    }
-    chosen = args.only.split(",") if args.only else list(modules)
+    chosen = args.only.split(",") if args.only else list(MODULES)
+    unknown = [n for n in chosen if n not in MODULES]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; --list shows the registry")
+    # import only what runs: each module pulls in jax + model code
+    modules = {name: importlib.import_module(f"benchmarks.{name}")
+               for name in chosen}
     mesh = parse_mesh(args.mesh)
 
     print("name,us_per_call,derived")

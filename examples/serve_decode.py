@@ -41,6 +41,10 @@ def main():
     ap.add_argument("--mesh", default="1",
                     help="device mesh 'D' or 'DxM' (data x model; default 1 = "
                          "single device; TP decode via shard_map)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative draft length (0 = plain decode; MRA "
+                         "kinds only — the pyramid is the draft model, "
+                         "DESIGN.md §10)")
     args = ap.parse_args()
     from repro.launch.mesh import parse_mesh
     mesh = parse_mesh(args.mesh)
@@ -58,8 +62,11 @@ def main():
             if step is not None:
                 params = restore(args.ckpt_dir, step, params)
                 print(f"restored checkpoint step {step}")
+        # speculation needs the MRA pyramid; the exact-attention reference
+        # engine always decodes plainly
+        spec_k = args.spec_k if kind.startswith("mra") else 0
         eng = Engine(cfg, params, slots=4, max_len=128, chunk=args.chunk,
-                     mesh=mesh)
+                     spec_k=spec_k, mesh=mesh)
         rng = np.random.default_rng(0)
         reqs = [Request(prompt=rng.integers(1, cfg.vocab, size=ln),
                         max_new_tokens=args.new_tokens,
@@ -69,9 +76,17 @@ def main():
                 for i, ln in enumerate((5, 9, 13, 7))]
         done = eng.run(reqs)
         outs[kind] = {len(r.prompt): r.out.tolist() for r in done}
+        spec_note = ""
+        if spec_k:
+            st = eng.stats
+            rate = st["spec_accepted_tokens"] / max(st["spec_drafted_tokens"], 1)
+            spec_note = (f" + {st['draft_dispatches']} draft + "
+                         f"{st['verify_dispatches']} verify; "
+                         f"accept rate {rate:.2f}")
         print(f"[{kind}] generated "
               f"({eng.stats['prefill_dispatches']} prefill + "
-              f"{eng.stats['decode_dispatches']} decode dispatches):")
+              f"{eng.stats['decode_dispatches']} decode dispatches"
+              f"{spec_note}):")
         for r in done:
             print(f"  req ({len(r.prompt)} prompt toks) -> {r.out.tolist()}")
 

@@ -25,7 +25,12 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 case "${1:-fast}" in
-  fast) python -m pytest -x -q ;;                # pytest.ini deselects slow+shard
+  fast)
+    python -m pytest -x -q                       # pytest.ini deselects slow+shard
+    # speculative-decoding smoke (DESIGN.md §10): K=2, tiny model, jnp paths
+    # (kernels stay in interpret-capable territory on the decode side)
+    python -m benchmarks.spec_bench --smoke
+    ;;
   lint)
     # tracked bytecode is a repo-hygiene regression (76 .pyc files were once
     # committed by accident); fail fast if it ever reappears

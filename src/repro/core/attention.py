@@ -30,6 +30,15 @@ class AttentionSpec:
     kind: "full" | "mra2" | "mra2_s" | "local" | any baselines.REGISTRY key.
     block_size / blocks_per_row: MRA-2 parameters (paper defaults 32 / 4-16).
     decode_blocks: MRA decode-time budget (exact KV blocks per new token).
+    coarse_only: MRA draft mode (DESIGN.md §10) — no top-m high-resolution
+      selection beyond the mandatory own/diagonal block: a query attends its
+      own block exactly and every other live block through the pyramid block
+      sums alone. This is the coarse level of the multiresolution
+      decomposition used as a free draft model by speculative decoding
+      (serve/speculative.py); O(S/b) per decoded token. Implemented as
+      blocks_per_row = 1 (full-sequence path: the force-selected diagonal is
+      the entire budget) and decode_blocks = 1 (decode/chunk path: the
+      force-selected own block is the entire budget).
     local_window: window for kind=="local" (RecurrentGemma local attention).
     shard: run attention inside a shard_map over the active mesh (batch ->
       data axes, kv-heads -> model axis); falls back to the bit-identical
@@ -41,6 +50,7 @@ class AttentionSpec:
     block_size: int = 32
     blocks_per_row: int = 4
     decode_blocks: int = 16
+    coarse_only: bool = False
     local_window: int = 1024
     softmax_scale: Optional[float] = None
     use_kernel: bool = False
@@ -52,10 +62,15 @@ class AttentionSpec:
     # only the gathered blocks. Only honored by the mra2/mra2_s decode path.
     kv_quant: bool = False
 
+    @property
+    def budget_blocks(self) -> int:
+        """Decode-time selection budget (1 when coarse-only: own block)."""
+        return 1 if self.coarse_only else self.decode_blocks
+
     def mra_config(self, causal: bool) -> MraConfig:
         return MraConfig(
             block_size=self.block_size,
-            blocks_per_row=self.blocks_per_row,
+            blocks_per_row=1 if self.coarse_only else self.blocks_per_row,
             variant="sparse" if self.kind == "mra2_s" else "full",
             causal=causal,
             softmax_scale=self.softmax_scale,
@@ -131,7 +146,7 @@ def decode_attention(
         cfg = spec.mra_config(causal=True)
         return mra2_decode_attention(
             q, k_cache, v_cache, lengths, cfg,
-            decode_blocks=spec.decode_blocks, pyramid=pyramid,
+            decode_blocks=spec.budget_blocks, pyramid=pyramid,
             page_blocks=page_blocks, k_scale=k_scale, v_scale=v_scale,
         )
     if spec.kind == "local":
@@ -171,7 +186,7 @@ def chunk_attention(
         cfg = spec.mra_config(causal=True)
         return mra2_chunk_attention(
             q, k_cache, v_cache, lengths, q_pos, cfg,
-            decode_blocks=spec.decode_blocks, pyramid=pyramid,
+            decode_blocks=spec.budget_blocks, pyramid=pyramid,
             page_blocks=page_blocks, k_scale=k_scale, v_scale=v_scale,
         )
     window = spec.local_window if spec.kind == "local" else None

@@ -172,6 +172,37 @@ def mra2_decode_attention(
     )
 
 
+def mra2_coarse_decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    cfg: MraConfig,
+    *,
+    pyramid: Optional[PyramidState] = None,
+    page_blocks: Optional[jax.Array] = None,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Coarse-only decode attention: the speculative draft pass (DESIGN.md §10).
+
+    ``mra2_decode_attention`` with the selection budget collapsed to the one
+    mandatory block — the query's own (force-selected, exactly masked) block.
+    Every other live page contributes only through its pyramid block sum, so
+    a draft token costs O(S/b) with no O(m*b) gather at all: the pyramid
+    pages the ring cache already maintains *are* the draft model. The serving
+    dispatch reaches the same math through ``AttentionSpec.coarse_only``
+    (budget_blocks == 1); this named form exists for direct measurement —
+    the fidelity of the coarse level is what bounds speculative decoding's
+    acceptance rate, and benchmarks/approx_error.py reports it next to the
+    budgeted variants.
+    """
+    return mra2_decode_attention(
+        q, k_cache, v_cache, lengths, cfg, decode_blocks=1, pyramid=pyramid,
+        page_blocks=page_blocks, k_scale=k_scale, v_scale=v_scale,
+    )
+
+
 def mra2_chunk_attention(
     q: jax.Array,
     k_cache: jax.Array,

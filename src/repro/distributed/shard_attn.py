@@ -25,6 +25,15 @@ is active or when the shapes do not divide the mesh axes, and the caller
 falls through to the bit-identical single-device path. Divisibility
 fallback mirrors distributed/sharding.py: an axis that does not divide is
 replicated, never an error.
+
+The speculative draft path (DESIGN.md §10) rides through unchanged: the
+coarse-only draft is just an ``AttentionSpec`` with ``coarse_only`` set, and
+the spec dataclass travels into the shard_map body verbatim
+(``spec.replace(shard=False)`` keeps every other field), so draft decode
+steps and chunked verify dispatches run under the same DP×TP mapping as
+plain serving — coarse selection and the pyramid background are per-(batch,
+kv-head) independent exactly like the budgeted variants. TP spec-engine
+parity is pinned in the shard CI tier (tests/test_engine.py).
 """
 from __future__ import annotations
 

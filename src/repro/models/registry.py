@@ -16,6 +16,13 @@ requires, and the transformer families implement:
   preserved bit-for-bit (slot isolation under ragged batching).
 Families without these (rwkv6, recurrentgemma) still train/prefill/decode
 whole batches but are rejected by Engine at construction.
+
+Speculative serving (Engine(spec_k=...), DESIGN.md §10) further leans on
+``prefill_chunk(..., all_logits=True, collect_kv=True)`` — all-position
+logits for draft verification plus the chunk's fp32 K/V for the bounded
+ring rewind — and on ``decode_step`` running under the coarse-only
+AttentionSpec (the draft pass). Both are the same transformer entry points,
+not new model API.
 """
 from __future__ import annotations
 

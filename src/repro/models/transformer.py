@@ -270,7 +270,8 @@ def prefill(params, cfg: ModelConfig, batch, cache):
     return logits[:, 0], new_cache
 
 
-def prefill_chunk(params, cfg: ModelConfig, cache, tokens, num_valid):
+def prefill_chunk(params, cfg: ModelConfig, cache, tokens, num_valid, *,
+                  all_logits=False, collect_kv=False):
     """Chunked batched prefill: C prompt tokens per slot, ragged lengths.
 
     The serving engine's prefill path (DESIGN.md §9): each call advances every
@@ -281,13 +282,27 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, num_valid):
     instead of the O(P) single-token decode replays of the old engine, and a
     slot's writes never touch other slots' rows (bit-exact slot isolation).
 
+    Speculative verification (DESIGN.md §10) reuses this dispatch unchanged:
+    the chunk is [fed token, drafts] instead of prompt tokens, and it may
+    start at any offset — including past the ring capacity, where a chunk
+    token opening a new block recycles its page exactly like
+    ``ring_pyramid_update`` (drop the evicted block's sums before adding).
+
     Args:
       tokens: (B, C) int32 prompt chunk per slot (padding arbitrary).
       num_valid: (B,) int32 count of real tokens in each slot's chunk;
         0 freezes the slot for this call (cache rows preserved bit-for-bit).
+      all_logits: return logits at every chunk position, not just the last
+        valid one — speculative verify needs the target distribution after
+        each draft.
+      collect_kv: also return the chunk's per-layer fp32 K/V
+        ((L, B, Hkv, C, D) each) — the exact values the pyramid adds used,
+        so a partial ring rewind can replay accepted-prefix contributions
+        bit-for-bit even when the cache itself stores int8 pages.
 
     Returns:
-      (logits (B, V) at each slot's last valid chunk position, cache).
+      (logits (B, V) — or (B, C, V) when ``all_logits`` — , cache), with
+      ``(chunk_k, chunk_v)`` appended when ``collect_kv``.
     """
     B, C = tokens.shape
     offsets = cache["lengths"]  # (B,)
@@ -309,6 +324,7 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, num_valid):
         m = tv_kv if vt.ndim == 4 else tv[:, :, None]
         return arr.at[b_idx2, :, widx].set(jnp.where(m, vt, old))
 
+    chunk_k, chunk_v = [], []
     for i, p in enumerate(_layers_iter(params, cfg)):
         h = L.apply_norm(x, p["ln1"], cfg)
         q, k_new, v_new = L.qkv_project(h, p["attn"], cfg, positions)
@@ -333,6 +349,9 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, num_valid):
         new_cache["v"] = list(new_cache["v"])
         new_cache["k"][i] = kc
         new_cache["v"][i] = vc
+        if collect_kv:
+            chunk_k.append(k_new.astype(jnp.float32))
+            chunk_v.append(v_new.astype(jnp.float32))
         pyramid = None
         if "pyr_k" in new_cache:
             npages = new_cache["pyr_k"][i].shape[2]
@@ -341,9 +360,20 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, num_valid):
             # scatter-add ordering concerns), npages is small
             ind = ((page[:, :, None] == jnp.arange(npages)) & tv[:, :, None])
             ind = ind.astype(jnp.float32)
-            pk = new_cache["pyr_k"][i] + jnp.einsum(
+            base_k, base_v = new_cache["pyr_k"][i], new_cache["pyr_v"][i]
+            if paged:
+                # ring recycle (the chunked analogue of ring_pyramid_update's
+                # keep mask): a chunk token that *starts* a new block evicts
+                # the page's previous owner — drop its sums before adding.
+                # During prompt prefill the recycled page holds zeros (slot
+                # reset), so this is exactly the pre-existing math there.
+                fresh = jnp.any(
+                    (ind > 0) & ((positions % bs) == 0)[:, :, None], axis=1)
+                base_k = jnp.where(fresh[:, None, :, None], 0.0, base_k)
+                base_v = jnp.where(fresh[:, None, :, None], 0.0, base_v)
+            pk = base_k + jnp.einsum(
                 "bcy,bhcd->bhyd", ind, k_new.astype(jnp.float32))
-            pv = new_cache["pyr_v"][i] + jnp.einsum(
+            pv = base_v + jnp.einsum(
                 "bcy,bhcd->bhyd", ind, v_new.astype(jnp.float32))
             new_cache["pyr_k"] = list(new_cache["pyr_k"])
             new_cache["pyr_v"] = list(new_cache["pyr_v"])
@@ -370,10 +400,15 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, num_valid):
         else:
             x = x + L.mlp_block(h, p["mlp"], cfg)
     x = L.apply_norm(x, params["ln_f"], cfg)
-    last = jnp.clip(num_valid - 1, 0, C - 1)
-    x_last = x[jnp.arange(B), last]  # (B, d)
-    logits = L.unembed(x_last[:, None], params["embed"], cfg)[:, 0]
+    if all_logits:
+        logits = L.unembed(x, params["embed"], cfg)  # (B, C, V)
+    else:
+        last = jnp.clip(num_valid - 1, 0, C - 1)
+        x_last = x[jnp.arange(B), last]  # (B, d)
+        logits = L.unembed(x_last[:, None], params["embed"], cfg)[:, 0]
     new_cache["lengths"] = lengths_new
+    if collect_kv:
+        return logits, new_cache, (jnp.stack(chunk_k), jnp.stack(chunk_v))
     return logits, new_cache
 
 

@@ -2,6 +2,7 @@ from .engine import Engine
 from .kv_cache import RingPagedKVCache
 from .sampling import SamplingParams, sample, sample_batch
 from .scheduler import Request, Scheduler, SlotState
+from .speculative import SpecDecoder
 
 __all__ = [
     "Engine",
@@ -10,6 +11,7 @@ __all__ = [
     "SamplingParams",
     "Scheduler",
     "SlotState",
+    "SpecDecoder",
     "sample",
     "sample_batch",
 ]

@@ -12,7 +12,12 @@ The production-serving loop (DESIGN.md §9). Per engine iteration:
      chunk's last-position logits.
   3. decode — ONE jitted ``decode_step`` + fused ``sample_batch`` dispatch
      advances every DECODE slot (active-masked: other slots' state is
-     untouched bit-for-bit), each at its own ragged length.
+     untouched bit-for-bit), each at its own ragged length. With
+     ``spec_k > 0`` the decode wave instead runs a resolution-speculative
+     round (serve/speculative.py, DESIGN.md §10): K coarse-pyramid draft
+     steps + one chunked full-MRA verify dispatch emit up to K+1 tokens per
+     slot, with rejection sampling keeping output distributions — and greedy
+     outputs bit — identical to this non-speculative path.
 
 Slots never wait for each other: a slot can decode while its neighbor is
 mid-prefill, and finished slots readmit immediately. With ``mesh`` set the
@@ -92,6 +97,10 @@ class Engine:
       generation beyond it evicts the oldest background pages instead of
       failing. For dense attention kinds it is a hard prompt+generation cap.
     chunk: prefill chunk size (tokens per slot per prefill dispatch).
+    spec_k: speculative draft length (0 = plain decode). Each decode wave
+      drafts ``spec_k`` tokens per slot with coarse-only MRA attention and
+      verifies them in one chunked dispatch; requires an MRA attention kind
+      (the pyramid is the draft model) and ``spec_k + 1 <= max_len``.
 
     Serves the transformer token-LM families (dense/moe): chunked prefill
     requires ``prefill_chunk`` and slot isolation requires active-masked
@@ -103,14 +112,24 @@ class Engine:
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 512, chunk: int = 32, mesh=None):
+                 max_len: int = 512, chunk: int = 32, spec_k: int = 0,
+                 mesh=None):
         self.cfg = cfg
         self.model = get_model(cfg)
         self.slots = slots
         self.max_len = max_len
         self.chunk = min(chunk, max_len)
+        self.spec_k = spec_k
         self.mesh = mesh
         self.kv = RingPagedKVCache(cfg, self.model, slots, max_len, mesh=mesh)
+        self._spec = None
+        if spec_k:
+            from .speculative import SpecDecoder
+
+            if spec_k + 1 > max_len:
+                raise ValueError(
+                    f"spec_k {spec_k} + 1 exceeds the cache window {max_len}")
+            self._spec = SpecDecoder(cfg, spec_k)
         if mesh is not None:
             from repro.models.params import param_shardings
 
@@ -129,6 +148,13 @@ class Engine:
             "prefill_tokens": 0,
             "generated_tokens": 0,
             "requests_completed": 0,
+            # speculative decoding (spec_k > 0; serve/speculative.py)
+            "spec_rounds": 0,
+            "draft_dispatches": 0,
+            "verify_dispatches": 0,
+            "spec_drafted_tokens": 0,
+            "spec_accepted_tokens": 0,
+            "spec_emitted_tokens": 0,
             # bounded: a long-lived engine must not grow host memory per step
             "decode_step_seconds": collections.deque(maxlen=4096),
         }
@@ -173,18 +199,35 @@ class Engine:
                     self.stats["generated_tokens"] += 1
 
         active = sched.decode_mask()
-        if active.any():
-            t0 = time.perf_counter()
-            feed = sched.feed_tokens()
-            temp, top_k, top_p, seed, step = sched.sampler_arrays()
-            nxt, self.kv.tree = self._decode(
-                self.params, self.kv.tree, jnp.asarray(feed),
-                jnp.asarray(active), jnp.asarray(sched.any_sampling()),
-                jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
-                jnp.asarray(seed), jnp.asarray(step))
-            nxt = np.asarray(nxt)
-            self.stats["decode_dispatches"] += 1
-            for s in np.flatnonzero(active):
-                sched.on_sampled(int(s), nxt[s])
-                self.stats["generated_tokens"] += 1
-            self.stats["decode_step_seconds"].append(time.perf_counter() - t0)
+        if not active.any():
+            return
+        t0 = time.perf_counter()
+        if self._spec is not None:
+            # slots whose round window straddles a ring-eviction boundary
+            # take a plain decode step instead (a chunked verify would
+            # evict a block that its earlier queries must still see; the
+            # oracle evicts it only when the boundary token is written) —
+            # up to spec_k waves approaching each block crossing.
+            spec_wave, plain_wave = self._spec.split_wave(self.kv, active)
+            if spec_wave.any():
+                self._spec.round(self, sched, spec_wave)
+            if plain_wave.any():
+                self._plain_decode(sched, plain_wave)
+        else:
+            self._plain_decode(sched, active)
+        self.stats["decode_step_seconds"].append(time.perf_counter() - t0)
+
+    def _plain_decode(self, sched: Scheduler, active: np.ndarray) -> None:
+        """One fused decode_step + sample dispatch for the ``active`` slots."""
+        feed = sched.feed_tokens()
+        temp, top_k, top_p, seed, step = sched.sampler_arrays()
+        nxt, self.kv.tree = self._decode(
+            self.params, self.kv.tree, jnp.asarray(feed),
+            jnp.asarray(active), jnp.asarray(sched.any_sampling()),
+            jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
+            jnp.asarray(seed), jnp.asarray(step))
+        nxt = np.asarray(nxt)
+        self.stats["decode_dispatches"] += 1
+        for s in np.flatnonzero(active):
+            sched.on_sampled(int(s), nxt[s])
+            self.stats["generated_tokens"] += 1

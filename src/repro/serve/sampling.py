@@ -10,6 +10,17 @@ request's ``i``-th sampled token is ``fold_in(PRNGKey(seed), i)`` — a pure
 function of the request's seed and the token index, never of the slot it
 landed in, the batch around it, or wall-clock state. Batched engine output is
 therefore bit-identical to a single-request run with the same seed.
+
+Speculative decoding (DESIGN.md §10) extends the same contract: every extra
+random decision the draft/verify loop makes about the request's ``i``-th
+token — drafting it, accepting it, resampling it on rejection — derives its
+key as ``fold_in(fold_in(PRNGKey(seed), i), tag)`` with a fixed per-role tag,
+so speculative serving stays a pure function of (seed, token index) and
+batched ≡ solo stays bit-exact. The accept/resample math is standard
+rejection sampling (Leviathan et al., 2023): accept draft ``d`` with
+probability ``min(1, p(d)/q(d))``, resample rejections from
+``norm(max(p - q, 0))`` — the emitted distribution is exactly ``p``
+(pinned by a hypothesis property test in tests/test_mra_properties.py).
 """
 from __future__ import annotations
 
@@ -40,10 +51,22 @@ class SamplingParams:
 
 GREEDY = SamplingParams()
 
+# speculative-decoding key roles (see determinism contract above): the draft
+# proposal, the accept test, and the rejection resample for token index i all
+# need independent randomness that is still a pure function of (seed, i).
+SPEC_DRAFT_TAG = 1
+SPEC_ACCEPT_TAG = 2
+SPEC_RESID_TAG = 3
+
 
 def request_key(seed, step):
     """PRNG key for a request's ``step``-th sampled token."""
     return jax.random.fold_in(jax.random.PRNGKey(seed), step)
+
+
+def spec_key(seed, step, tag):
+    """PRNG key for a speculative decision about the ``step``-th token."""
+    return jax.random.fold_in(request_key(seed, step), tag)
 
 
 def _masked_logits(logits, vocab):
@@ -63,21 +86,17 @@ def greedy_batch(logits, *, vocab=None):
     return jnp.argmax(_masked_logits(logits, vocab), axis=-1).astype(jnp.int32)
 
 
-def sample_batch(logits, temperature, top_k, top_p, seed, step, *, vocab=None):
-    """Sample one token per slot. All sampler params are per-slot arrays.
+def filtered_logits(logits, temperature, top_k, top_p, *, vocab=None):
+    """Temperature-scaled, top-k/top-p-filtered logits: (B, V) -> (B, V).
 
-    Args:
-      logits: (B, V) next-token logits (V may include vocab padding).
-      temperature/top_p: (B,) float32; top_k/seed/step: (B,) int32.
-      vocab: real vocab size — padded logit columns are masked out.
-
-    Returns:
-      (B,) int32 sampled token ids.
+    ``softmax(filtered_logits(...))`` is the exact distribution
+    ``sample_batch`` draws from for a temperature > 0 slot. Split out so the
+    speculative accept/resample primitive (``spec_verify_batch``) scores the
+    *same* filtered target/draft distributions the oracle sampler uses —
+    filtering and acceptance can never disagree about the support.
     """
     B, V = logits.shape
     lf = _masked_logits(logits, vocab)
-    greedy_tok = jnp.argmax(lf, axis=-1).astype(jnp.int32)
-
     scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
     # top-k: mask everything below the k-th largest logit (ties are kept —
     # deterministic, and the categorical renormalizes anyway); k <= 0 disables
@@ -99,11 +118,122 @@ def sample_batch(logits, temperature, top_k, top_p, seed, step, *, vocab=None):
     # (top_p -> 0 then degenerates to greedy instead of disabling the filter)
     n_keep = jnp.maximum(jnp.sum(keep, axis=-1).astype(jnp.int32), 1)
     cutoff = jnp.take_along_axis(sdesc, n_keep[:, None] - 1, axis=-1)
-    scaled = jnp.where(scaled >= cutoff, scaled, NEG_INF)
+    return jnp.where(scaled >= cutoff, scaled, NEG_INF)
 
+
+def sample_batch(logits, temperature, top_k, top_p, seed, step, *, vocab=None):
+    """Sample one token per slot. All sampler params are per-slot arrays.
+
+    Args:
+      logits: (B, V) next-token logits (V may include vocab padding).
+      temperature/top_p: (B,) float32; top_k/seed/step: (B,) int32.
+      vocab: real vocab size — padded logit columns are masked out.
+
+    Returns:
+      (B,) int32 sampled token ids.
+    """
+    greedy_tok = greedy_batch(logits, vocab=vocab)
+    scaled = filtered_logits(logits, temperature, top_k, top_p, vocab=vocab)
     keys = jax.vmap(request_key)(seed, step)
     sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
     return jnp.where(temperature <= 0.0, greedy_tok, sampled)
+
+
+def draft_batch(logits, temperature, top_k, top_p, seed, step, *, vocab=None):
+    """Draft-propose one token per slot; also return its proposal distribution.
+
+    Same filtering math as ``sample_batch`` but keyed with ``SPEC_DRAFT_TAG``
+    (a draft proposal must not consume the oracle key of the token index it
+    speculates about — on rejection the oracle key is still unspent).
+
+    Returns:
+      (q_probs (B, V) float32 filtered proposal distribution,
+       tokens (B,) int32). For temperature <= 0 slots the token is the
+      greedy argmax and ``q_probs`` is unused by the accept rule.
+    """
+    greedy_tok = greedy_batch(logits, vocab=vocab)
+    scaled = filtered_logits(logits, temperature, top_k, top_p, vocab=vocab)
+    q_probs = jax.nn.softmax(scaled, axis=-1)
+    keys = jax.vmap(spec_key, (0, 0, None))(seed, step, SPEC_DRAFT_TAG)
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return q_probs, jnp.where(temperature <= 0.0, greedy_tok, sampled)
+
+
+def spec_residual(p, q):
+    """Rejection-resample logits: ``log(max(p - q, 0))`` with an empty-support
+    guard (p == q everywhere can only coincide with acceptance probability 1,
+    so the fallback to ``log p`` is unreachable in exact arithmetic — it only
+    catches float underflow)."""
+    resid = jnp.maximum(p - q, 0.0)
+    has = jnp.sum(resid, axis=-1, keepdims=True) > 0.0
+    safe = jnp.where(has, resid, p)
+    return jnp.log(jnp.maximum(safe, 1e-38))
+
+
+def spec_verify_batch(logits, draft, q_probs, temperature, top_k, top_p, seed,
+                      step0, active, *, vocab=None):
+    """Verify K drafted tokens per slot against target logits.
+
+    Standard speculative rejection sampling, vectorized over slots: draft i
+    is accepted with probability ``min(1, p_i(d_i) / q_i(d_i))`` where p/q
+    are the *filtered* target/draft distributions; the first rejection emits
+    a resample from ``norm(max(p_i - q_i, 0))`` and discards the rest; full
+    acceptance emits a bonus token from the (K+1)-th target distribution
+    using the ordinary ``request_key`` — exactly the draw the non-speculative
+    oracle would have made at that token index. Greedy slots
+    (temperature <= 0) degenerate to "accept while the draft matches the
+    target argmax, emit the target argmax at the first mismatch", which makes
+    greedy speculative decode token-identical to the oracle by induction.
+
+    Args:
+      logits: (B, K+1, V) target logits; ``[:, i]`` conditions on the fed
+        token plus drafts < i, i.e. it is the distribution of token index
+        ``step0 + i``.
+      draft: (B, K) int32 drafted tokens; q_probs (B, K, V) their filtered
+        proposal distributions (from ``draft_batch``).
+      temperature/top_p: (B,) float32; top_k/seed/step0: (B,) int32 with
+        ``step0`` the token index of the first draft.
+      active: (B,) bool — slots not in this speculative round emit nothing.
+
+    Returns:
+      (out (B, K+1) int32 — column j is the j-th token emitted this round,
+       n_out (B,) int32 emitted count (accepted + 1; 0 where inactive),
+       n_acc (B,) int32 accepted-draft count).
+    """
+    B, Kp1, V = logits.shape
+    K = Kp1 - 1
+    greedy = temperature <= 0.0
+    alive = active
+    n_acc = jnp.zeros((B,), jnp.int32)
+    outs = []
+    for i in range(K):
+        li = logits[:, i]
+        greedy_tok = greedy_batch(li, vocab=vocab)
+        scaled = filtered_logits(li, temperature, top_k, top_p, vocab=vocab)
+        p = jax.nn.softmax(scaled, axis=-1)
+        d = draft[:, i]
+        q = q_probs[:, i]
+        pd = jnp.take_along_axis(p, d[:, None], axis=-1)[:, 0]
+        qd = jnp.take_along_axis(q, d[:, None], axis=-1)[:, 0]
+        u = jax.vmap(jax.random.uniform)(
+            jax.vmap(spec_key, (0, 0, None))(seed, step0 + i, SPEC_ACCEPT_TAG))
+        # u < pd/qd without the divide (qd >= 0; drafts have q(d) > 0)
+        acc = jnp.where(greedy, d == greedy_tok, u * qd < pd) & alive
+        keys_r = jax.vmap(spec_key, (0, 0, None))(seed, step0 + i,
+                                                  SPEC_RESID_TAG)
+        fix = jax.vmap(jax.random.categorical)(
+            keys_r, spec_residual(p, q)).astype(jnp.int32)
+        fix = jnp.where(greedy, greedy_tok, fix)
+        outs.append(jnp.where(acc, d, fix))
+        n_acc = n_acc + acc.astype(jnp.int32)
+        alive = acc
+    # bonus token after full acceptance: the ordinary oracle draw for index
+    # step0 + K (only read by callers where every draft was accepted)
+    bonus = sample_batch(logits[:, K], temperature, top_k, top_p, seed,
+                         step0 + K, vocab=vocab)
+    out = jnp.stack(outs + [bonus], axis=1)
+    n_out = jnp.where(active, n_acc + 1, 0)
+    return out, n_out, n_acc
 
 
 def sample(logits, params: SamplingParams, step: int, *, vocab=None):

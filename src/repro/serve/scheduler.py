@@ -39,6 +39,10 @@ class Request:
     max_new_tokens: int = 16
     sampling: SamplingParams = SamplingParams()
     out: Optional[np.ndarray] = None
+    # filled by the engine when serving speculatively (spec_k > 0): drafted
+    # tokens of this request that verification accepted (acceptance rate =
+    # spec_accepted / drafts offered; DESIGN.md §10)
+    spec_accepted: int = 0
 
 
 class SlotState(enum.Enum):
@@ -76,6 +80,8 @@ class Scheduler:
         self.slots = [Slot() for _ in range(slots)]
         self.pending: deque = deque()
         self.done: List[Request] = []
+        # ragged per-slot accepted-draft totals roll up here (spec decoding)
+        self.spec_accepted_total = 0
 
     # ---- admission ---------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -175,6 +181,27 @@ class Scheduler:
         return temp, top_k, top_p, seed, step
 
     # ---- progress ----------------------------------------------------------
+    def on_spec_tokens(self, s: int, tokens, n_accepted: int) -> int:
+        """Deliver a speculative round's emitted tokens to slot ``s``.
+
+        ``tokens`` is the round's ragged emission for this slot (accepted
+        drafts + the correction/bonus token, in order); ``n_accepted`` counts
+        the accepted drafts among them. Delivery stops when the request
+        completes — surplus verified tokens are discarded (the engine's
+        rewind already trimmed the cache, and a freed slot is reset
+        bit-exactly on readmission anyway). Returns the delivered count.
+        """
+        slot = self.slots[s]
+        assert slot.state is SlotState.DECODE and slot.req is not None
+        slot.req.spec_accepted += int(n_accepted)
+        self.spec_accepted_total += int(n_accepted)
+        delivered = 0
+        for t in tokens:
+            delivered += 1
+            if self.on_sampled(s, int(t)) is not None:
+                break
+        return delivered
+
     def on_sampled(self, s: int, token: int) -> Optional[Request]:
         """Record a sampled token for slot ``s``; returns the request when done."""
         slot = self.slots[s]

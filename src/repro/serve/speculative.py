@@ -1,0 +1,177 @@
+"""Resolution-speculative decoding: coarse-pyramid draft + chunked MRA verify.
+
+The MRA decomposition gives every serving slot a free draft model
+(DESIGN.md §10): the pyramid block sums the ring-paged cache already
+maintains ARE a cheap low-resolution view of the whole context. Per
+speculative round, for every slot in the decode wave:
+
+  1. snapshot — ``kv_cache.spec_snapshot`` captures the bounded ring window
+     the round may destroy (O(K) per slot, never a cache copy);
+  2. draft — K ordinary ``decode_step`` dispatches under the *coarse-only*
+     AttentionSpec (own block exact, everything else through the pyramid
+     sums; no top-m gather) autoregressively propose K tokens, writing
+     draft K/V into the ring exactly like real decode;
+  3. rewind — the draft's writes are rolled back (draft activations ran
+     under coarse attention, so its K/V are approximations the verified
+     stream must not keep);
+  4. verify — ONE ``prefill_chunk`` dispatch (the PR 3 C-query path,
+     unchanged) feeds [fed token, drafts] as a (K+1)-chunk: it rewrites the
+     window with exact full-MRA K/V and returns the target distribution
+     after every draft;
+  5. accept — ``sampling.spec_verify_batch`` runs rejection sampling per
+     slot (greedy degenerates to argmax-match, so greedy speculative decode
+     is token-identical to the non-speculative oracle); the final
+     ``spec_rewind`` trims each slot to its accepted prefix + correction
+     token, replaying the kept positions' pyramid contributions bit-for-bit.
+
+All five steps are batched across slots with ragged per-slot acceptance;
+slots mid-prefill or frozen ride along untouched (``active`` masking), and
+under a mesh every step runs tensor-parallel through the same shard_map
+attention paths as normal serving (distributed/shard_attn.py — the spec
+pytree carries ``coarse_only`` through unchanged).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+
+from .sampling import draft_batch, greedy_batch, spec_verify_batch
+
+__all__ = ["SpecDecoder", "draft_config"]
+
+
+def draft_config(cfg: ModelConfig) -> ModelConfig:
+    """The draft model IS the target model under coarse-only attention."""
+    return cfg.replace(attention=cfg.attention.replace(coarse_only=True))
+
+
+@functools.lru_cache(maxsize=None)
+def _make_spec_fns(cfg: ModelConfig):
+    """Jitted (draft_step, verify, accept) for a config.
+
+    Cached on the (frozen, hashable) ModelConfig like the engine's own fns
+    so every Engine instance shares compiled executables. None of the
+    wrappers closes over the draft length K — draft steps are single-token
+    and verify/accept retrace per chunk shape under jit — so engines that
+    differ only in ``spec_k`` share them too.
+    """
+    model = get_model(cfg)
+    dcfg = draft_config(cfg)
+
+    def draft_step(params, cache, tokens, active, any_sampling, temp, top_k,
+                   top_p, seed, step):
+        logits, cache = model.decode_step(params, dcfg, cache, tokens,
+                                          active=active)
+        # all-greedy rounds skip the sort/softmax pipeline (cf. the engine's
+        # decode fast path); the greedy branch's q_probs are never read
+        q, nxt = jax.lax.cond(
+            any_sampling,
+            lambda lg: draft_batch(lg, temp, top_k, top_p, seed, step,
+                                   vocab=cfg.vocab),
+            lambda lg: (jnp.zeros_like(lg, jnp.float32),
+                        greedy_batch(lg, vocab=cfg.vocab)),
+            logits)
+        return jnp.where(active, nxt, tokens), q, cache
+
+    def verify(params, cache, tokens, num_valid):
+        return model.prefill_chunk(params, cfg, cache, tokens, num_valid,
+                                   all_logits=True, collect_kv=True)
+
+    def accept(logits, draft, q_probs, temp, top_k, top_p, seed, step0,
+               active):
+        return spec_verify_batch(logits, draft, q_probs, temp, top_k, top_p,
+                                 seed, step0, active, vocab=cfg.vocab)
+
+    return jax.jit(draft_step), jax.jit(verify), jax.jit(accept)
+
+
+class SpecDecoder:
+    """Drives one speculative round per engine iteration (Engine.spec_k)."""
+
+    def __init__(self, cfg: ModelConfig, spec_k: int):
+        if cfg.attention.kind not in ("mra2", "mra2_s"):
+            raise NotImplementedError(
+                "speculative decoding drafts through the MRA pyramid; "
+                f"attention kind {cfg.attention.kind!r} has no coarse level")
+        assert spec_k >= 1
+        self.cfg = cfg
+        self.k = spec_k
+        self._draft, self._verify, self._accept = _make_spec_fns(cfg)
+
+    def split_wave(self, kv, active: np.ndarray):
+        """(speculable, plain) split of the decode wave.
+
+        A slot is speculable when its round window (L0, L0 + K] contains no
+        ring-eviction boundary (a block start at position >= capacity): a
+        chunked verify writes the whole window before attending, so a
+        boundary strictly inside it would evict a block that the window's
+        earlier queries still see in the oracle. A boundary exactly AT L0 is
+        fine — the fed token's write evicts it for every query, same as the
+        oracle. Affected slots take plain decode steps instead: up to K
+        consecutive waves approaching each block crossing (~K/block of
+        post-capacity tokens), until the boundary sits at the window start.
+        Shrinking the draft window to the boundary instead (ragged per-slot
+        K) would keep those waves speculative — ROADMAP open item.
+        """
+        L0 = kv.lengths
+        last_boundary = (L0 + self.k) // kv.block * kv.block
+        unsafe = (last_boundary > L0) & (last_boundary >= kv.capacity)
+        return active & ~unsafe, active & unsafe
+
+    def round(self, engine, sched, active: np.ndarray) -> None:
+        """One batched draft(K) -> rewind -> verify -> accept -> trim round.
+
+        ``active`` is the decode wave mask; inactive slots' state is
+        preserved bit-for-bit through every dispatch.
+        """
+        K = self.k
+        kv = engine.kv
+        stats = engine.stats
+        snap = kv.spec_snapshot(K + 1)
+        act = jnp.asarray(active)
+        fed = jnp.asarray(sched.feed_tokens())
+        temp, top_k, top_p, seed, step0 = map(jnp.asarray,
+                                              sched.sampler_arrays())
+        any_s = jnp.asarray(sched.any_sampling())
+
+        tok, drafts, qs = fed, [], []
+        for j in range(K):
+            tok, q, kv.tree = self._draft(
+                engine.params, kv.tree, tok, act, any_s, temp, top_k, top_p,
+                seed, step0 + j)
+            drafts.append(tok)
+            qs.append(q)
+            stats["draft_dispatches"] += 1
+        # roll the draft's approximate writes back before the exact rewrite
+        kv.spec_rewind(snap, snap["lengths"], act)
+
+        chunk = jnp.stack([fed] + drafts, axis=1)  # (B, K+1)
+        num_valid = jnp.where(act, K + 1, 0).astype(jnp.int32)
+        logits, kv.tree, chunk_kv = self._verify(
+            engine.params, kv.tree, chunk, num_valid)
+        stats["verify_dispatches"] += 1
+
+        out, n_out, n_acc = self._accept(
+            logits, jnp.stack(drafts, axis=1), jnp.stack(qs, axis=1),
+            temp, top_k, top_p, seed, step0, act)
+        # trim each slot to accepted prefix + correction/bonus token: the
+        # last emitted token is never fed, so the kept stream is L0 + n_out
+        kv.spec_rewind(snap, snap["lengths"] + n_out, act, chunk_kv)
+
+        out, n_out, n_acc = map(np.asarray, (out, n_out, n_acc))
+        emitted = 0
+        for s in np.flatnonzero(active):
+            emitted += sched.on_spec_tokens(
+                int(s), out[s, : n_out[s]], int(n_acc[s]))
+        stats["generated_tokens"] += emitted
+        stats["spec_rounds"] += 1
+        stats["spec_drafted_tokens"] += int(K * active.sum())
+        stats["spec_accepted_tokens"] += int(n_acc[active].sum())
+        # delivered to requests (surplus past max_new_tokens is discarded)
+        stats["spec_emitted_tokens"] += emitted

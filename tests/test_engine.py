@@ -233,6 +233,99 @@ def test_chunk_attention_full_budget_exact():
 
 
 # --------------------------------------------------------------------------- #
+# Resolution-speculative decoding (DESIGN.md §10)
+# --------------------------------------------------------------------------- #
+def test_spec_greedy_matches_nonspec_oracle(cfg, params):
+    """Greedy speculative decode is bit-identical to the non-speculative
+    engine for every slot of a ragged batch — including mid-stream
+    rejections, readmission (more requests than slots), and ring eviction
+    past max_len (the 40-token request wraps the 32-token window)."""
+    def reqs():
+        return [
+            Request(prompt=np.arange(1, 9), max_new_tokens=40),   # evicts
+            Request(prompt=np.arange(1, 20), max_new_tokens=7),
+            Request(prompt=np.array([5, 11, 2]), max_new_tokens=12),
+            Request(prompt=np.array([9]), max_new_tokens=3),
+        ]
+    base = Engine(cfg, params, slots=2, max_len=32, chunk=8).run(reqs())
+    eng = Engine(cfg, params, slots=2, max_len=32, chunk=8, spec_k=4)
+    got = eng.run(reqs())
+    by = {len(r.prompt): r.out for r in base}
+    for r in got:
+        np.testing.assert_array_equal(r.out, by[len(r.prompt)])
+    # the speculative path actually ran, and some drafts were rejected
+    # mid-stream (an all-accepted run would not exercise the trim rewind)
+    assert eng.stats["spec_rounds"] > 0
+    assert eng.stats["verify_dispatches"] == eng.stats["spec_rounds"]
+    assert 0 < eng.stats["spec_accepted_tokens"] < eng.stats["spec_drafted_tokens"]
+    # speculation emits more tokens than it takes full-attention dispatches
+    assert eng.stats["generated_tokens"] > eng.stats["verify_dispatches"]
+
+
+def test_spec_sampled_batched_equals_solo_with_trace(cfg, params):
+    """Sampled speculative decode: batched == solo bit-exact (the spec_key
+    fold_in contract), and the fixed-seed acceptance trace is deterministic
+    across runs AND across batch compositions."""
+    def mk():
+        return [
+            Request(prompt=np.arange(1, 20), max_new_tokens=6,
+                    sampling=SamplingParams(temperature=0.9, seed=7)),
+            Request(prompt=np.array([5, 11, 2]), max_new_tokens=8,
+                    sampling=SamplingParams(temperature=1.0, top_k=5, seed=3)),
+            Request(prompt=np.arange(2, 12), max_new_tokens=5,
+                    sampling=SamplingParams(temperature=0.7, top_p=0.9,
+                                            seed=11)),
+        ]
+    runs = [Engine(cfg, params, slots=3, max_len=64, chunk=8, spec_k=3).run(mk())
+            for _ in range(2)]
+    for batched in runs:
+        by = {len(r.prompt): r for r in batched}
+        ref = {len(r.prompt): r for r in runs[0]}
+        for plen, r in by.items():
+            np.testing.assert_array_equal(r.out, ref[plen].out)
+            assert r.spec_accepted == ref[plen].spec_accepted
+    by = {len(r.prompt): r for r in runs[0]}
+    for req in mk():
+        solo = Engine(cfg, params, slots=3, max_len=64, chunk=8,
+                      spec_k=3).run([req])[0]
+        np.testing.assert_array_equal(solo.out, by[len(solo.prompt)].out)
+        assert solo.spec_accepted == by[len(solo.prompt)].spec_accepted
+
+
+def test_spec_ring_rewind_restores_bit_exact(cfg, params):
+    """Total rejection: snapshot -> K coarse draft steps (crossing a ring
+    eviction boundary) -> rewind restores lengths, page table, pyramid AND
+    the recycled pages' K/V bytes bit-exactly."""
+    from repro.serve.speculative import draft_config
+
+    model = get_model(cfg)
+    eng = Engine(cfg, params, slots=2, max_len=32, chunk=8)  # 2 pages of 16
+    # park slot streams just before the capacity boundary (lengths 30, 12)
+    eng.run([Request(prompt=np.arange(1, 9), max_new_tokens=23),
+             Request(prompt=np.arange(3, 9), max_new_tokens=7)])
+    before = jax.tree.map(np.asarray, eng.kv.tree)
+    act = jnp.asarray([True, True])
+    snap = eng.kv.spec_snapshot(5)
+    dcfg = draft_config(cfg)
+    tok = jnp.asarray([7, 9], jnp.int32)
+    for _ in range(4):  # slot 0 writes 30..33: evicts block 0 at pos 32
+        logits, eng.kv.tree = model.decode_step(params, dcfg, eng.kv.tree,
+                                                tok, active=act)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert int(eng.kv.lengths[0]) == 34  # the draft really advanced/evicted
+    eng.kv.spec_rewind(snap, snap["lengths"], act)
+    after = jax.tree.map(np.asarray, eng.kv.tree)
+    jax.tree.map(np.testing.assert_array_equal, before, after)
+
+
+def test_spec_rejects_non_mra_attention(cfg, params):
+    """No pyramid, no draft model: spec_k on dense attention must raise."""
+    dense = cfg.replace(attention=cfg.attention.replace(kind="full"))
+    with pytest.raises(NotImplementedError, match="coarse"):
+        Engine(dense, params, slots=1, max_len=32, chunk=8, spec_k=2)
+
+
+# --------------------------------------------------------------------------- #
 # TP-meshed engine parity (shard tier; DESIGN.md §8/§9)
 # --------------------------------------------------------------------------- #
 @pytest.mark.shard
@@ -267,6 +360,44 @@ def test_engine_tp_serving_matches_single_device():
         # 19-token prompt alone needs ceil(19/8) = 3 chunks; the other two
         # prompts ride along in shared or readmission dispatches
         assert ref_eng.stats["prefill_dispatches"] <= 4
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.shard
+def test_engine_tp_spec_serving_matches_single_device():
+    """Speculative serving (coarse draft + chunked verify + ring rewind)
+    generates identical tokens on the DP=2 x TP=4 fake mesh (DESIGN.md §10):
+    the draft AttentionSpec and the rewind's gather/scatter all partition
+    under the same batch->data / kv-heads->model mapping."""
+    out = run_in_fake_mesh("""
+        import numpy as np, jax
+        from repro.configs import get_smoke_config
+        from repro.launch.mesh import make_local_mesh
+        from repro.models import get_model, init_params
+        from repro.serve import Engine, Request, SamplingParams
+
+        cfg = get_smoke_config("qwen3-1.7b", num_heads=8, kv_heads=4, head_dim=8)
+        params = init_params(get_model(cfg).param_specs(cfg), jax.random.PRNGKey(0))
+        reqs = lambda: [
+            Request(prompt=np.array([3, 5, 7]), max_new_tokens=12),
+            Request(prompt=np.arange(2, 21), max_new_tokens=8,
+                    sampling=SamplingParams(temperature=0.8, seed=13)),
+            Request(prompt=np.array([11, 13]), max_new_tokens=6),
+        ]
+        ref = Engine(cfg, params, slots=2, max_len=64, chunk=8,
+                     spec_k=3).run(reqs())
+        mesh = make_local_mesh(2, 4)
+        eng = Engine(cfg.replace(attn_shard=True), params, slots=2,
+                     max_len=64, chunk=8, spec_k=3, mesh=mesh)
+        got = eng.run(reqs())
+        ref_by = {len(r.prompt): r for r in ref}
+        for r in got:
+            assert np.array_equal(r.out, ref_by[len(r.prompt)].out), \\
+                (r.out, ref_by[len(r.prompt)].out)
+            assert r.spec_accepted == ref_by[len(r.prompt)].spec_accepted
+        assert eng.stats["spec_rounds"] > 0
         print("OK")
     """)
     assert "OK" in out

@@ -4,6 +4,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 
 import hypothesis.strategies as st
+import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given
@@ -175,6 +176,79 @@ def test_quantize_kv_roundtrip_within_int8_bound(seed, amplitude):
     err = np.asarray(jnp.abs(back - x))
     bound = np.asarray(s)[..., None] * 0.5 + 1e-7
     assert (err <= bound).all()
+
+
+# --------------------------------------------------------------------------- #
+# Speculative decoding: the accept/resample primitive (DESIGN.md §10)
+# --------------------------------------------------------------------------- #
+def _random_dist(r, V):
+    x = r.gamma(0.7, size=V).astype(np.float64) + 1e-9
+    return x / x.sum()
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8, 16]))
+def test_spec_rejection_sampling_emits_target_distribution(seed, V):
+    """The rejection-sampling identity the verify path relies on: for any
+    draft distribution q, accepting d ~ q with prob min(1, p(d)/q(d)) and
+    resampling rejections from norm(max(p - q, 0)) emits exactly p."""
+    from repro.serve.sampling import spec_residual
+
+    r = np.random.default_rng(seed)
+    p = _random_dist(r, V)
+    q = _random_dist(r, V)
+    accept = np.minimum(p, q)  # q(t) * min(1, p(t)/q(t))
+    p_reject = 1.0 - accept.sum()
+    resid = np.exp(np.asarray(spec_residual(jnp.asarray(p), jnp.asarray(q))))
+    resid = resid / resid.sum()
+    emitted = accept + p_reject * resid
+    np.testing.assert_allclose(emitted, p, atol=1e-6)  # fp32 residual path
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(0, 4))
+def test_spec_verify_greedy_is_argmax_prefix_match(seed, K, n_match):
+    """Greedy verification accepts exactly the prefix of drafts matching the
+    target argmax chain and emits the target argmax at every position."""
+    from repro.serve.sampling import spec_verify_batch
+
+    r = np.random.default_rng(seed)
+    V = 16
+    logits = jnp.asarray(r.standard_normal((1, K + 1, V)), jnp.float32)
+    argmax = np.asarray(jnp.argmax(logits[0], -1))
+    n = min(n_match, K)
+    draft = argmax[:K].copy()
+    if n < K:  # first mismatch at position n
+        draft[n] = (draft[n] + 1) % V
+    out, n_out, n_acc = spec_verify_batch(
+        logits, jnp.asarray(draft[None]), jnp.zeros((1, K, V)),
+        jnp.zeros((1,)), jnp.zeros((1,), jnp.int32), jnp.ones((1,)),
+        jnp.asarray([3], jnp.int32), jnp.asarray([5], jnp.int32),
+        jnp.asarray([True]))
+    assert int(n_acc[0]) == n
+    assert int(n_out[0]) == n + 1
+    np.testing.assert_array_equal(np.asarray(out)[0, : n + 1], argmax[: n + 1])
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_spec_verify_accepts_everything_when_draft_equals_target(seed, K):
+    """q == p makes the accept probability min(1, p/q) = 1: a draft sampled
+    from the target's own filtered distribution is always fully accepted,
+    for any seed/temperature."""
+    from repro.serve.sampling import filtered_logits, spec_verify_batch
+
+    r = np.random.default_rng(seed)
+    V = 16
+    logits = jnp.asarray(r.standard_normal((1, K + 1, V)), jnp.float32)
+    temp = jnp.asarray([0.8], jnp.float32)
+    tk = jnp.zeros((1,), jnp.int32)
+    tp = jnp.ones((1,), jnp.float32)
+    q = jnp.stack([jax.nn.softmax(
+        filtered_logits(logits[:, i], temp, tk, tp), -1) for i in range(K)], 1)
+    # draft token i sampled from q_i itself (any in-support token works)
+    draft = jnp.argmax(q, -1).astype(jnp.int32)
+    _, n_out, n_acc = spec_verify_batch(
+        logits, draft, q, temp, tk, tp, jnp.asarray([seed % 997], jnp.int32),
+        jnp.asarray([2], jnp.int32), jnp.asarray([True]))
+    assert int(n_acc[0]) == K and int(n_out[0]) == K + 1
 
 
 @given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]))
