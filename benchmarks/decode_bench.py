@@ -93,6 +93,28 @@ def run(emit):
         q, k_ring, v_ring)
     emit("mra_decode_paged_ring_s4096", us, f"{err:.6f}")
 
+    # fused Pallas serving kernel rows (DESIGN.md §11): same selection, the
+    # gather + two-level softmax + background + normalize fused on-chip.
+    # Interpret mode off-TPU, so the absolute time only proves the path runs
+    # end-to-end; the kernel-vs-jnp ratio is meaningful on real TPUs. The
+    # derived column doubles as the online parity check vs the jnp rows.
+    interpret = jax.devices()[0].platform != "tpu"
+    kspec = AttentionSpec(kind="mra2", block_size=b, decode_blocks=16,
+                          use_kernel=True, interpret=interpret, shard=shard)
+    out_k = decode_attention(q, k, v, lengths, kspec)
+    err = float(jnp.linalg.norm(out_k - ref) / jnp.linalg.norm(ref))
+    us = time_call(
+        lambda q, k, v: decode_attention(q, k, v, lengths, kspec), q, k, v)
+    emit("mra_decode_s4096_m16_kernel", us, f"{err:.4f}")
+    out2k = decode_attention(q, k_ring, v_ring, lengths2, kspec,
+                             page_blocks=pb_ring)
+    err = float(jnp.abs(out2k - ref2).max())
+    us = time_call(
+        lambda q, k_ring, v_ring: decode_attention(
+            q, k_ring, v_ring, lengths2, kspec, page_blocks=pb_ring),
+        q, k_ring, v_ring)
+    emit("mra_decode_paged_ring_s4096_kernel", us, f"{err:.6f}")
+
 
 def main() -> None:
     import argparse

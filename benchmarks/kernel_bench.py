@@ -6,8 +6,12 @@ Times three routes over the same inputs/selection budget:
   * kernel        — Pallas fwd + fused Pallas bwd (interpret mode off-TPU)
   * kernel_jnpbwd — Pallas fwd + jnp fallback bwd (the dispatch boundary)
 
+plus the serving-side twin (PR 5, DESIGN.md §11): chunk/decode attention
+against a KV cache through the fused Pallas serving kernel vs. the pure-jnp
+gather path, with the max |out| difference as the online parity check.
+
 On a CPU host the Pallas kernels run in interpret mode, so the absolute
-numbers only demonstrate that the training path executes end-to-end; the
+numbers only demonstrate that the paths execute end-to-end; the
 kernel-vs-jnp *ratio* is only meaningful on a real TPU, where interpret
 flips to False automatically. The derived column reports the max |grad|
 difference vs the jnp path (a cheap online correctness check).
@@ -18,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.attention import AttentionSpec, chunk_attention, decode_attention
 from repro.core.mra import MraConfig, mra2_attention
 
 from .common import structured_qkv, time_call
@@ -65,3 +70,28 @@ def run(emit):
             for a, b in zip(grads[name], grads["jnp"])
         )
         emit(f"kernel_bench_graddiff_{name}", 0.0, f"{diff:.2e}")
+
+    # ---- serving kernel: chunk/decode attention vs the KV cache (§11) ----- #
+    B, Hq, Hkv, S, Dd, bd, C, m = (
+        (4, 8, 2, 2048, 64, 32, 16, 16) if _on_tpu() else
+        (2, 4, 2, 128, 16, 16, 8, 4))
+    _, kc, vc = structured_qkv(rng, B=B, H=Hkv, N=S, D=Dd)
+    lengths = jnp.full((B,), S, jnp.int32)
+    q_pos = jnp.broadcast_to(jnp.arange(S - C, S), (B, C))
+    qc = jnp.asarray(rng.standard_normal((B, Hq, C, Dd)), jnp.float32)
+    q1 = qc[:, :, :1]
+    for route, use_kernel in (("jnp", False), ("kernel", True)):
+        spec = AttentionSpec(kind="mra2", block_size=bd, decode_blocks=m,
+                             use_kernel=use_kernel, interpret=interpret)
+        us = time_call(
+            lambda q: decode_attention(q, kc, vc, lengths, spec), q1)
+        emit(f"kernel_bench_decode_{route}", us, f"interpret={interpret}")
+        us = time_call(
+            lambda q: chunk_attention(q, kc, vc, lengths, q_pos, spec), qc)
+        emit(f"kernel_bench_chunk_c{C}_{route}", us, f"interpret={interpret}")
+    spec_j = AttentionSpec(kind="mra2", block_size=bd, decode_blocks=m)
+    spec_k = spec_j.replace(use_kernel=True, interpret=interpret)
+    diff = float(jnp.abs(
+        chunk_attention(qc, kc, vc, lengths, q_pos, spec_k)
+        - chunk_attention(qc, kc, vc, lengths, q_pos, spec_j)).max())
+    emit("kernel_bench_chunk_outdiff_kernel", 0.0, f"{diff:.2e}")

@@ -84,6 +84,30 @@ def run(emit):
          f"{chunked} vs {replay} replay ({ratio:.0f}x fewer)")
     assert ratio >= 5.0, (chunked, replay)
 
+    # fused Pallas serving kernel (DESIGN.md §11): the same engine with
+    # chunked prefill + decode attention routed through kernels/chunk_attn.py
+    # (interpret mode off-TPU, so treat the CPU tok/s as a does-it-run row,
+    # not a speedup claim; the derived column pins the token streams equal).
+    interpret = jax.devices()[0].platform != "tpu"
+    kcfg = cfg.replace(attn_use_kernel=True, attn_interpret=interpret)
+    lens = [8, 12, 5]
+    reqs = _requests(rng, cfg.vocab, lens, new_tokens)
+    ref = Engine(cfg, params, slots=2, max_len=64, chunk=8, mesh=mesh).run(
+        [Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens,
+                 sampling=r.sampling) for r in reqs])
+    eng = Engine(kcfg, params, slots=2, max_len=64, chunk=8, mesh=mesh)
+    eng.run(reqs[:1])  # warmup: compile the kernel-path prefill + decode
+    eng.reset_stats()
+    t0 = time.perf_counter()
+    done = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    gen = eng.stats["generated_tokens"]
+    by = {len(r.prompt): r.out for r in ref}
+    match = all(np.array_equal(r.out, by[len(r.prompt)]) for r in done)
+    emit("serve_kernel_tok_per_s", dt / max(gen, 1) * 1e6,
+         f"{gen / dt:.1f} tokens_match={match}")
+    assert match
+
 
 def main() -> None:
     import argparse

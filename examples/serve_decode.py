@@ -45,6 +45,10 @@ def main():
                     help="speculative draft length (0 = plain decode; MRA "
                          "kinds only — the pyramid is the draft model, "
                          "DESIGN.md §10)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route MRA chunk/decode attention through the fused "
+                         "Pallas serving kernel (DESIGN.md §11; interpret "
+                         "mode off-TPU — slow on CPU, same tokens)")
     args = ap.parse_args()
     from repro.launch.mesh import parse_mesh
     mesh = parse_mesh(args.mesh)
@@ -52,9 +56,15 @@ def main():
     outs = {}
     for kind in ("mra2", "full"):
         cfg = get_smoke_config(args.arch)
+        # the serving kernel is an MRA path; the exact-attention reference
+        # engine always runs the dense jnp oracle
+        use_kernel = args.use_kernel and kind.startswith("mra")
         cfg = cfg.replace(attention=dataclasses.replace(
             cfg.attention, kind=kind, decode_blocks=2),
-            attn_shard=mesh is not None)
+            attn_shard=mesh is not None,
+            attn_use_kernel=use_kernel,
+            attn_interpret=use_kernel
+            and jax.devices()[0].platform != "tpu")
         model = get_model(cfg)
         params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
         if args.ckpt_dir:

@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
 # CI tiers: install dev deps (best effort — the offline container already
 # bakes in jax/pytest), then run the requested tier on CPU. The Pallas
-# kernels run in interpret mode inside the tests (tests/test_differential.py,
-# tests/test_kernels_block_sparse.py), so the TPU fwd+bwd path is exercised
-# end-to-end on every CPU run; the shard tier re-runs the training/serving
-# stack under 8 fake host devices (tests/test_shard_parity.py).
+# kernels run in interpret mode inside the tests — training fwd+bwd
+# (tests/test_differential.py, tests/test_kernels_block_sparse.py) and the
+# fused chunk/decode serving kernel (tests/test_chunk_kernel.py, DESIGN.md
+# §11) — so both TPU paths are exercised end-to-end on every CPU run; the
+# shard tier re-runs the training/serving stack, serving kernel included,
+# under 8 fake host devices (tests/test_shard_parity.py).
 #
 # Usage:
 #   scripts/ci.sh          # fast tier (default: pytest -m "not slow and not shard")

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from . import baselines
-from .mra import MraConfig, full_attention, mra2_attention
+from .mra import MraConfig, NEG_INF, full_attention, mra2_attention
 from .mra_decode import (
     full_chunk_attention,
     full_decode_attention,
@@ -40,6 +40,10 @@ class AttentionSpec:
       the entire budget) and decode_blocks = 1 (decode/chunk path: the
       force-selected own block is the entire budget).
     local_window: window for kind=="local" (RecurrentGemma local attention).
+    use_kernel: route the fused Pallas kernels — training/prefill through
+      kernels/block_sparse_attn.py (fwd + bwd, DESIGN.md §3), decode and
+      chunked prefill through the serving kernel kernels/chunk_attn.py
+      (fwd-only fused two-level softmax, DESIGN.md §11).
     shard: run attention inside a shard_map over the active mesh (batch ->
       data axes, kv-heads -> model axis); falls back to the bit-identical
       local path when no mesh is active or shapes don't divide
@@ -240,7 +244,7 @@ def _local_attention(q, k, v, spec, *, causal, key_mask):
             dist_ok = jnp.abs(qi - kj) <= w // 2
         mask = dist_ok[None, None, None, None] & ok_blk[None, None, None, :, None, None]
         mask = mask & mm[:, None, None, :, None, :]
-        s = jnp.where(mask, s, -1e9)
+        s = jnp.where(mask, s, NEG_INF)
         scores.append(s)
         vals.append(vv)
     s_all = jnp.concatenate(scores, axis=-1)
@@ -261,7 +265,7 @@ def _local_decode_attention(q, k_cache, v_cache, lengths, spec):
     G = Hq // Hkv
     qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
     s = jnp.einsum("bhgd,bhjd->bhgj", qg, k_cache.astype(jnp.float32)) * scale
-    s = jnp.where(ok[:, None, None, :], s, -1e9)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgj,bhjd->bhgd", p, v_cache.astype(jnp.float32))
     return out.reshape(B, Hq, 1, D).astype(q.dtype)

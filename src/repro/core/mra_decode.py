@@ -47,11 +47,24 @@ class PyramidState(NamedTuple):
         return PyramidState(z, z)
 
     def append(self, k_new: jax.Array, v_new: jax.Array, pos: jax.Array, block: int):
-        """Add one token's K/V at position ``pos`` (per-batch array (B,))."""
+        """Add one token's K/V at position ``pos`` (per-batch array (B,)).
+
+        Dense layout only: ``pos`` must lie inside the ``nb * block`` capacity.
+        Past it the target block does not exist — an unguarded scatter would be
+        clamped by JAX to ``nb - 1``, silently corrupting the last block's sums
+        — so out-of-capacity appends are dropped instead (no-op for that
+        slot). Ring streams that outlive the capacity must go through
+        ``ring_pyramid_update``, which recycles pages instead of dropping.
+        """
+        nb = self.k_sum.shape[2]
         blk = pos // block  # (B,)
+        in_cap = (blk < nb)[:, None, None]
         b_idx = jnp.arange(self.k_sum.shape[0])
-        k_sum = self.k_sum.at[b_idx, :, blk].add(k_new.astype(self.k_sum.dtype))
-        v_sum = self.v_sum.at[b_idx, :, blk].add(v_new.astype(self.v_sum.dtype))
+        blk = jnp.minimum(blk, nb - 1)  # clamp AFTER masking the contribution
+        k_sum = self.k_sum.at[b_idx, :, blk].add(
+            jnp.where(in_cap, k_new.astype(self.k_sum.dtype), 0))
+        v_sum = self.v_sum.at[b_idx, :, blk].add(
+            jnp.where(in_cap, v_new.astype(self.v_sum.dtype), 0))
         return PyramidState(k_sum, v_sum)
 
 
@@ -203,39 +216,31 @@ def mra2_coarse_decode_attention(
     )
 
 
-def mra2_chunk_attention(
-    q: jax.Array,
-    k_cache: jax.Array,
-    v_cache: jax.Array,
-    lengths: jax.Array,
-    q_pos: jax.Array,
-    cfg: MraConfig,
-    *,
-    decode_blocks: int = 16,
-    pyramid: Optional[PyramidState] = None,
-    page_blocks: Optional[jax.Array] = None,
-    k_scale: Optional[jax.Array] = None,
-    v_scale: Optional[jax.Array] = None,
-) -> jax.Array:
-    """Chunked-prefill attention: C queries vs. the (ring-paged) KV cache.
+class ChunkPrelude(NamedTuple):
+    """Shared jnp half of chunk/decode MRA attention (DESIGN.md §11).
 
-    The chunked generalization of ``mra2_decode_attention``: per query token
-    at global position ``p`` the coarse page scores pick the top-``m`` live
-    pages among blocks strictly before ``p // b`` for exact attention, the
-    query's own (partial) block is force-selected and masked exactly to
-    ``pos_k <= p``, and the remaining live past pages contribute the coarse
-    background. With C == 1 and ``q_pos == lengths - 1`` this is numerically
-    identical to the decode path (tests/test_engine.py pins it).
-
-    Args:
-      q: (B, Hq, C, D) chunk queries; their K/V must already be in the cache.
-      lengths: (B,) total written length (chunk included).
-      q_pos: (B, C) global position of each query token.
-      page_blocks: (B, nb) ring page table; None = dense identity layout.
-
-    Returns:
-      (B, Hq, C, D) attention output.
+    Coarse page scoring + top-m selection stay in jnp on both routes; the
+    pure path continues with the gather/exp/normalize tail below, the Pallas
+    route (``kernels/chunk_attn.py``) consumes these fields and fuses that
+    tail on-chip. ``scale``/``block_size`` are static trace-time values.
     """
+
+    qg: jax.Array        # (B, Hkv, G, C, D) grouped queries, compute dtype
+    pb: jax.Array        # (B, nb) page table (identity when unpaged)
+    counts: jax.Array    # (B, nb) valid tokens per page
+    v_ds: jax.Array      # (B, Hkv, nb, D) per-page V means
+    coarse_m: jax.Array  # (B, Hkv, G, C, nb) masked coarse scores
+    y_idx: jax.Array     # (B, Hkv, G, C, m) selected physical pages
+    sel_ok: jax.Array    # (B, Hkv, G, C, m) selection validity
+    allowed: jax.Array   # (B, 1, 1, C|1, nb)-broadcastable support mask
+    own: jax.Array       # same shape: query's own block
+    scale: float
+    block_size: int
+
+
+def _chunk_prelude(q, k_cache, v_cache, lengths, q_pos, cfg, decode_blocks,
+                   pyramid, page_blocks) -> ChunkPrelude:
+    """Page stats, coarse scores, and top-m page selection (jnp, both routes)."""
     B, Hq, C, D = q.shape
     Hkv, S = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
@@ -276,6 +281,69 @@ def mra2_chunk_attention(
     sel_scores = coarse_m + FORCE_BONUS * own
     top_vals, y_idx = jax.lax.top_k(sel_scores, m)  # (B, Hkv, G, C, m)
     sel_ok = top_vals > NEG_INF * 0.5
+    return ChunkPrelude(qg, pb, counts, v_ds, coarse_m, y_idx, sel_ok,
+                        allowed, own, scale, b)
+
+
+def mra2_chunk_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    q_pos: jax.Array,
+    cfg: MraConfig,
+    *,
+    decode_blocks: int = 16,
+    pyramid: Optional[PyramidState] = None,
+    page_blocks: Optional[jax.Array] = None,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Chunked-prefill attention: C queries vs. the (ring-paged) KV cache.
+
+    The chunked generalization of ``mra2_decode_attention``: per query token
+    at global position ``p`` the coarse page scores pick the top-``m`` live
+    pages among blocks strictly before ``p // b`` for exact attention, the
+    query's own (partial) block is force-selected and masked exactly to
+    ``pos_k <= p``, and the remaining live past pages contribute the coarse
+    background. With C == 1 and ``q_pos == lengths - 1`` this is numerically
+    identical to the decode path (tests/test_engine.py pins it).
+
+    With ``cfg.use_kernel`` the selection prelude stays here and the
+    gather/two-level-softmax/background/normalize tail runs in the fused
+    Pallas serving kernel (``kernels/chunk_attn.py``, DESIGN.md §11);
+    forward-only — the serving path is never differentiated.
+
+    Args:
+      q: (B, Hq, C, D) chunk queries; their K/V must already be in the cache.
+      lengths: (B,) total written length (chunk included).
+      q_pos: (B, C) global position of each query token.
+      page_blocks: (B, nb) ring page table; None = dense identity layout.
+
+    Returns:
+      (B, Hq, C, D) attention output.
+    """
+    B, Hq, C, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    b = cfg.block_size
+    nb = S // b
+    cdt = cfg.compute_dtype
+
+    pre = _chunk_prelude(q, k_cache, v_cache, lengths, q_pos, cfg,
+                         decode_blocks, pyramid, page_blocks)
+    if cfg.use_kernel:
+        from repro.kernels.chunk_attn import chunk_attention_kernel
+
+        out = chunk_attention_kernel(
+            pre, k_cache, v_cache, q_pos, k_scale=k_scale, v_scale=v_scale,
+            include_bg=cfg.variant == "full", interpret=cfg.interpret)
+        return out.astype(q.dtype)
+
+    qg, pb, counts = pre.qg, pre.pb, pre.counts
+    v_ds, coarse_m = pre.v_ds, pre.coarse_m
+    y_idx, sel_ok = pre.y_idx, pre.sel_ok
+    allowed, own, scale = pre.allowed, pre.own, pre.scale
 
     c = jnp.maximum(jnp.max(coarse_m, axis=-1), NEG_INF * 0.5)  # (B,Hkv,G,C)
 
@@ -369,7 +437,13 @@ def full_decode_attention(
     softmax_scale: Optional[float] = None,
     compute_dtype=jnp.float32,
 ) -> jax.Array:
-    """Exact decode attention oracle. O(S) per token."""
+    """Exact decode attention oracle. O(S) per token.
+
+    Length-0 slots have every key masked; softmax over the finite ``NEG_INF``
+    sentinel would be uniform and return a garbage V-average, so all-masked
+    rows are zeroed — the same contract as ``full_chunk_attention`` (and as
+    the MRA paths' ``alive`` guard), pinned by tests/test_engine.py.
+    """
     B, Hq, _, D = q.shape
     Hkv, S = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
@@ -379,4 +453,6 @@ def full_decode_attention(
     s = jnp.where((jnp.arange(S) < lengths[:, None])[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgj,bhjd->bhgd", p, v_cache.astype(compute_dtype))
+    has = (lengths > 0)[:, None, None, None]  # all-masked rows -> zeros
+    out = jnp.where(has, out, 0.0)
     return out.reshape(B, Hq, 1, D).astype(q.dtype)

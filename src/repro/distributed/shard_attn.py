@@ -13,11 +13,13 @@ unsharded — so the correct mesh mapping is a ``shard_map`` over
     splitting Hkv over |model| splits Hq into the matching contiguous
     chunks).
 
-Inside the region every path (jnp, Pallas fwd + custom_vjp bwd) runs its
-ordinary single-device code on the local shard; no collectives are needed in
-the forward, and the backward's grad all-reduce over the batch axes is the
-``shard_map`` transpose of the batch in_specs (a psum placed by JAX, not by
-us — see DESIGN.md §8).
+Inside the region every path (jnp, Pallas fwd + custom_vjp bwd, and the
+fused chunk/decode serving kernel of DESIGN.md §11 — its ``use_kernel`` /
+``interpret`` fields travel inside the spec dataclass like every other
+flag) runs its ordinary single-device code on the local shard; no
+collectives are needed in the forward, and the backward's grad all-reduce
+over the batch axes is the ``shard_map`` transpose of the batch in_specs (a
+psum placed by JAX, not by us — see DESIGN.md §8).
 
 Dispatch contract: callers (core/attention.py) route here when
 ``AttentionSpec.shard`` is set; these functions return ``None`` when no mesh

@@ -1,0 +1,279 @@
+"""Pallas TPU kernel: ring-paged chunk/decode MRA attention for serving.
+
+This is the serving-side twin of the training kernels in
+``block_sparse_attn.py`` (DESIGN.md §11). The pure-jnp serving hot path
+(``core/mra_decode.py::mra2_chunk_attention``) materializes an
+``(B, Hkv, G, C, m, b, D)`` gathered-page tensor and the matching exp-weight
+tensors in HBM on every decode wave and verify chunk; this kernel keeps the
+gather on-chip: the per-query *selected page ids* ride in SMEM via
+``PrefetchScalarGridSpec`` and the BlockSpec ``index_map`` DMAs exactly the
+selected K/V pages HBM→VMEM, one page per grid step.
+
+Grid: ``(BQ, m)`` with ``BQ = B·Hkv·G·C`` flattened query rows (decode is the
+C == 1 case) and ``m`` the selection budget. Output-tile revisits of a row
+are consecutive, so the per-row accumulators (numerator tile, row sum,
+running max) stay resident in VMEM between grid steps — the same
+sequential-grid accumulation contract the training kernels rely on.
+
+Fused per query row (matching the jnp path's math, DESIGN.md §11):
+
+  * exact term — flash-style *online* softmax over the m selected pages:
+    each page raises a running per-query max and rescales the resident
+    numerator/row-sum by ``exp(m_old − m_new)``; masked exactly to
+    ``pos_k <= q_pos`` inside the (possibly partial) pages.
+  * int8 dequant — when the cache is quantized, the gathered page is
+    dequantized *in kernel* from the per-token scales tile (the jnp path's
+    gather-then-dequant, without the HBM round trip).
+  * coarse background — at the last grid step the masked coarse score row
+    (computed in jnp for the top-m selection anyway) is turned into the
+    background term ``Σ_bg exp(μ − c)·count_y · v̄_y`` against the resident
+    ``v_ds`` page-means tile, aligned onto the per-token stabilizer
+    ``c_tok = max(c, fine_max)`` by ``exp(c − c_tok)`` — the two-level
+    stabilizer of DESIGN.md §3, decode flavor.
+  * the normalized output is emitted directly (all-masked rows → 0), so no
+    unnormalized intermediates ever reach HBM.
+
+Top-m page selection stays in jnp: the coarse scores are O(C·nb) and feed
+``jax.lax.top_k``; what the kernel removes is the O(m·b·D) gather traffic
+and the fused softmax/background/normalize passes over it.
+
+Forward-only by design: the serving path is never differentiated (training
+uses the §3 kernels). Differentiating through this op raises at trace time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.mra import NEG_INF  # shared finite "minus infinity" sentinel
+
+
+def _dot(a, b_, dims):
+    return jax.lax.dot_general(a, b_, (dims, ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _chunk_kernel(
+    # scalar prefetch (SMEM)
+    ysel_ref,   # (BQ, m) selected *physical* page ids (drive the DMA)
+    blk_ref,    # (BQ, m) logical block of each selection (-1 dead)
+    selok_ref,  # (BQ, m) 1 = selection valid (top_k hit a live allowed page)
+    qpos_ref,   # (BQ, 1) global position of the query token
+    # VMEM tiles
+    q_ref,      # (1, D) query row
+    k_ref,      # (1, 1, b, D) selected K page
+    v_ref,      # (1, 1, b, D) selected V page
+    ks_ref,     # (1, 1, b) K dequant scales ((1,1,b) dummy when not quant)
+    vs_ref,     # (1, 1, b) V dequant scales
+    coarse_ref,  # (1, nb) masked coarse scores (NEG_INF off-support)
+    counts_ref,  # (1, nb) valid tokens per page
+    pb_ref,     # (1, nb) page table row (logical block per page, -1 dead)
+    vds_ref,    # (1, nb, D) per-page V means (coarse background values)
+    # outputs (accumulators resident across the m grid steps of a row)
+    o_ref,      # (1, D) numerator, normalized in place at the last step
+    rs_ref,     # (1, 1) row sum
+    mt_ref,     # (1, 1) running fine-score max
+    *,
+    scale: float,
+    block_size: int,
+    m: int,
+    quant: bool,
+    include_bg: bool,
+):
+    r = pl.program_id(0)
+    i = pl.program_id(1)
+    b = block_size
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        rs_ref[...] = jnp.zeros_like(rs_ref)
+        mt_ref[...] = jnp.zeros_like(mt_ref) + NEG_INF
+
+    q = q_ref[...].astype(jnp.float32)      # (1, D)
+    k = k_ref[0, 0].astype(jnp.float32)     # (b, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    if quant:  # int8 pages: dequantize in VMEM from the per-token scales
+        k = k * ks_ref[0, 0][:, None]
+        v = v * vs_ref[0, 0][:, None]
+
+    s = _dot(q, k, ((1,), (1,))) * scale    # (1, b)
+    qpos = qpos_ref[r, 0]
+    blk = blk_ref[r, i]
+    pos = blk * b + jax.lax.broadcasted_iota(jnp.int32, (1, b), 1)
+    ok = (selok_ref[r, i] == 1) & (blk >= 0) & (pos <= qpos)
+
+    # online two-level stabilization (flash-style): raise the running max,
+    # shrink the resident accumulators, add this page at the new max.
+    m_old = mt_ref[0, 0]
+    m_new = jnp.maximum(m_old, jnp.max(jnp.where(ok, s, NEG_INF)))
+    alpha = jnp.exp(m_old - m_new)  # ≤ 1; underflows to 0 from the NEG_INF init
+    a = jnp.where(ok, jnp.exp(jnp.minimum(s - m_new, 0.0)), 0.0)
+    o_ref[...] = o_ref[...] * alpha + _dot(a, v, ((1,), (0,)))
+    rs_ref[...] = rs_ref[...] * alpha + jnp.sum(a)
+    mt_ref[...] = jnp.zeros_like(mt_ref) + m_new
+
+    @pl.when(i == m - 1)
+    def _finalize():
+        coarse = coarse_ref[...]            # (1, nb), NEG_INF off-support
+        c = jnp.maximum(jnp.max(coarse), NEG_INF * 0.5)
+        mt = mt_ref[0, 0]
+        c_tok = jnp.maximum(c, mt)          # two-level per-token stabilizer
+        fine_adj = jnp.exp(mt - c_tok)      # mt ≤ c_tok, so ≤ 1
+        out = o_ref[...] * fine_adj
+        rs = rs_ref[0, 0] * fine_adj
+        if include_bg:  # MRA-2 "full": coarse pyramid background
+            cnt = counts_ref[...]           # (1, nb)
+            pb = pb_ref[...]                # (1, nb)
+            jq = qpos_ref[r, 0] // b
+            # background support: live past pages minus the query's own block
+            # minus the exactly-evaluated selections (jnp's bg mask).
+            bg = (cnt > 0.0) & (pb <= jq) & (pb != jq)
+            col = jax.lax.broadcasted_iota(jnp.int32, (1, coarse.shape[1]), 1)
+            for j in range(m):  # static unroll: m is small, SMEM reads scalar
+                bg = bg & ~((selok_ref[r, j] == 1) & (col == ysel_ref[r, j]))
+            # coarse ≤ c on the support by construction, so exp arg ≤ 0
+            w = jnp.where(bg, jnp.exp(coarse - c), 0.0) * cnt
+            adj = jnp.exp(c - c_tok)
+            vds = vds_ref[0].astype(jnp.float32)  # (nb, D)
+            out = out + adj * _dot(w, vds, ((1,), (0,)))
+            rs = rs + adj * jnp.sum(w)
+        alive = rs > 0.0
+        o_ref[...] = jnp.where(alive, out, 0.0) / jnp.where(alive, rs, 1.0)
+
+
+def _no_grad(*args, **kw):
+    raise NotImplementedError(
+        "mra2 chunk/decode kernel is forward-only (serving path); training "
+        "differentiates through the §3 block-sparse kernels instead")
+
+
+@functools.partial(
+    jax.custom_jvp, nondiff_argnums=(12, 13, 14, 15, 16, 17))
+def _chunk_attention_call(
+    q2, k4, v4, ks3, vs3, coarse2, counts2, pb2, vds3,
+    ysel, blk, qselok,
+    scale, block_size, m, quant, include_bg, interpret,
+):
+    """pallas_call entry. q2 (BQ, D); k4/v4 (BKV, nb, b, D); coarse2 (BQ, nb);
+    counts2/pb2 (B, nb); vds3 (BKV, nb, D); ysel/blk (BQ, m) int32;
+    qselok (BQ, m + 1) int32 = [q_pos | selok] packed (q_pos column first)."""
+    BQ, D = q2.shape
+    BKV, nb, b, _ = k4.shape
+    B = counts2.shape[0]
+    gc = BQ // BKV       # G * C: query rows per KV row
+    hgc = BQ // B        # Hkv * G * C: query rows per batch row
+    qpos = qselok[:, :1]
+    selok = qselok[:, 1:]
+
+    kernel = functools.partial(
+        _chunk_kernel, scale=scale, block_size=b, m=m, quant=quant,
+        include_bg=include_bg)
+    # ``quant`` is static: without scales the (1, 1, b) dummy tiles map to a
+    # constant block index, so they are DMA'd once and never re-fetched (the
+    # kernel body also statically skips them).
+    if quant:
+        scale_map = lambda r, i, ys, bl, so, qp: (r // gc, ys[r, i], 0)  # noqa: E731
+    else:
+        scale_map = lambda r, i, ys, bl, so, qp: (0, 0, 0)  # noqa: E731
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(BQ, m),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda r, i, ys, bl, so, qp: (r, 0)),
+            pl.BlockSpec((1, 1, b, D),
+                         lambda r, i, ys, bl, so, qp: (r // gc, ys[r, i], 0, 0)),
+            pl.BlockSpec((1, 1, b, D),
+                         lambda r, i, ys, bl, so, qp: (r // gc, ys[r, i], 0, 0)),
+            pl.BlockSpec((1, 1, b), scale_map),
+            pl.BlockSpec((1, 1, b), scale_map),
+            pl.BlockSpec((1, nb), lambda r, i, ys, bl, so, qp: (r, 0)),
+            pl.BlockSpec((1, nb), lambda r, i, ys, bl, so, qp: (r // hgc, 0)),
+            pl.BlockSpec((1, nb), lambda r, i, ys, bl, so, qp: (r // hgc, 0)),
+            pl.BlockSpec((1, nb, D),
+                         lambda r, i, ys, bl, so, qp: (r // gc, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D), lambda r, i, ys, bl, so, qp: (r, 0)),
+            pl.BlockSpec((1, 1), lambda r, i, ys, bl, so, qp: (r, 0)),
+            pl.BlockSpec((1, 1), lambda r, i, ys, bl, so, qp: (r, 0)),
+        ],
+    )
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((BQ, D), jnp.float32),
+            jax.ShapeDtypeStruct((BQ, 1), jnp.float32),
+            jax.ShapeDtypeStruct((BQ, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(ysel, blk, selok, qpos, q2, k4, v4, ks3, vs3, coarse2, counts2, pb2,
+      vds3)
+    return out
+
+
+_chunk_attention_call.defjvp(_no_grad)
+
+
+def chunk_attention_kernel(
+    pre,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    q_pos: jax.Array,
+    *,
+    k_scale=None,
+    v_scale=None,
+    include_bg: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused chunk/decode attention from a selection prelude.
+
+    ``pre`` is ``core.mra_decode.ChunkPrelude`` (coarse scores, top-m page
+    selection, page stats) — the jnp half shared bit-for-bit with the pure
+    path. Returns (B, Hq, C, D) fp32; the caller casts to q.dtype.
+    """
+    B, Hkv, G, C, D = pre.qg.shape
+    S = k_cache.shape[2]
+    b = pre.block_size
+    nb = S // b
+    m = pre.y_idx.shape[-1]
+    BQ = B * Hkv * G * C
+    BKV = B * Hkv
+
+    q2 = pre.qg.astype(jnp.float32).reshape(BQ, D)
+    k4 = k_cache.reshape(BKV, nb, b, *k_cache.shape[3:])
+    v4 = v_cache.reshape(BKV, nb, b, *v_cache.shape[3:])
+    quant = k_scale is not None
+    if quant:
+        ks3 = k_scale.astype(jnp.float32).reshape(BKV, nb, b)
+        vs3 = v_scale.astype(jnp.float32).reshape(BKV, nb, b)
+    else:  # one dummy tile keeps the arity static; constant index_map, no
+        # per-step DMA, and the kernel body statically skips it
+        ks3 = jnp.zeros((1, 1, b), jnp.float32)
+        vs3 = ks3
+    coarse2 = pre.coarse_m.astype(jnp.float32).reshape(BQ, nb)
+    counts2 = pre.counts.astype(jnp.float32)
+    pb2 = pre.pb.astype(jnp.int32)
+    vds3 = pre.v_ds.astype(jnp.float32).reshape(BKV, nb, D)
+
+    ysel = pre.y_idx.astype(jnp.int32).reshape(BQ, m)
+    # logical block of each selected physical page (positions mask)
+    blk = jnp.take_along_axis(
+        jnp.broadcast_to(pre.pb[:, None, None, None, :], (B, Hkv, G, C, nb)),
+        pre.y_idx, axis=-1).astype(jnp.int32).reshape(BQ, m)
+    selok = pre.sel_ok.astype(jnp.int32).reshape(BQ, m)
+    qpos = jnp.broadcast_to(
+        q_pos[:, None, None, :], (B, Hkv, G, C)).astype(jnp.int32)
+    qselok = jnp.concatenate([qpos.reshape(BQ, 1), selok], axis=1)
+
+    out = _chunk_attention_call(
+        q2, k4, v4, ks3, vs3, coarse2, counts2, pb2, vds3,
+        ysel, blk, qselok,
+        pre.scale, b, m, quant, include_bg, interpret,
+    )
+    return out.reshape(B, Hkv * G, C, D)

@@ -1,0 +1,274 @@
+"""Differential suite for the fused Pallas chunk/decode serving kernel.
+
+Pins ``kernels/chunk_attn.py`` (interpret mode — the TPU serving path run on
+CPU) to the pure-jnp ``mra2_chunk_attention`` / ``mra2_decode_attention``
+formulation across the axes where a data-dependent paged kernel can silently
+go wrong (DESIGN.md §11): ring paging × int8 quantization × coarse_only ×
+GQA × ragged lengths × chunk-vs-decode × MRA-2/MRA-2-s, plus the exact
+softmax oracle at full budget and the engine-level token conformance test
+(the jnp engine and the kernel engine must emit identical streams).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mra import MraConfig
+from repro.core.mra_decode import (
+    PyramidState,
+    full_chunk_attention,
+    identity_page_table,
+    mra2_chunk_attention,
+    mra2_decode_attention,
+    paged_position_mask,
+    quantize_kv,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    """One point of the serving-kernel differential sweep."""
+
+    paged: bool = False        # ring layout (stream longer than the cache)
+    quant: bool = False        # int8 pages + per-token scales
+    coarse_only: bool = False  # m = 1: own block + pyramid background only
+    group: int = 1             # GQA: Hq = group * Hkv
+    ragged: bool = False       # per-slot lengths (incl. a zero-length slot)
+    variant: str = "full"
+    B: int = 2
+    Hkv: int = 2
+    S: int = 64
+    D: int = 8
+    b: int = 16
+    m: int = 3
+    seed: int = 0
+
+    @property
+    def id(self) -> str:
+        return (
+            f"{'ring' if self.paged else 'dense'}-{'int8' if self.quant else 'fp'}"
+            f"-{'coarse' if self.coarse_only else f'm{self.m}'}-g{self.group}"
+            f"-{'ragged' if self.ragged else 'full'}-{self.variant}"
+        )
+
+
+# every combination of the risky axes (64 cases x {decode, chunk})
+SWEEP = [
+    Case(paged=p, quant=qz, coarse_only=co, group=g, ragged=rg, variant=v,
+         seed=i)
+    for i, (p, qz, co, g, rg, v) in enumerate(
+        itertools.product([False, True], [False, True], [False, True], [1, 2],
+                          [False, True], ["full", "sparse"])
+    )
+]
+
+
+def _cfgs(case: Case):
+    kw = dict(block_size=case.b, causal=True, variant=case.variant)
+    return (MraConfig(**kw),
+            MraConfig(**kw, use_kernel=True, interpret=True))
+
+
+def make_case_inputs(case: Case, *, C: int = 1, min_len: int = 0):
+    """(q, k, v, lengths, q_pos, page_blocks, k_scale, v_scale) for a case.
+
+    ``min_len`` bounds the ragged lengths from below. The serving contract is
+    ``q_pos <= lengths - 1`` (chunk queries are tokens already written to the
+    cache); with ``min_len < C`` some q_pos run past the stream — fine for
+    kernel↔jnp parity (identical math both sides) but out of contract for
+    exact-oracle comparisons, which must pass ``min_len=C``.
+    """
+    r = np.random.default_rng(case.seed)
+    B, Hkv, S, D, b = case.B, case.Hkv, case.S, case.D, case.b
+    nb = S // b
+    Hq = Hkv * case.group
+    k = jnp.asarray(r.standard_normal((B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((B, Hkv, S, D)), jnp.float32)
+    q = jnp.asarray(r.standard_normal((B, Hq, C, D)), jnp.float32)
+    page_blocks = None
+    if case.paged:
+        # a 1.5x-capacity stream through the ring: logical blocks
+        # nb/2 .. 3nb/2-1, block y on physical page y % nb
+        lengths = np.full((B,), S + S // 2)
+        page_blocks = jnp.roll(
+            jnp.broadcast_to((jnp.arange(nb, dtype=jnp.int32) + nb // 2)[None],
+                             (B, nb)), nb // 2, axis=1)
+    elif case.ragged:
+        lengths = np.array([min_len] + list(r.integers(max(min_len, 1), S + 1,
+                                                       B - 1)))
+    else:
+        lengths = np.full((B,), S)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    q_pos = jnp.maximum(lengths[:, None] - C, 0) + jnp.arange(C)
+    k_scale = v_scale = None
+    if case.quant:
+        k, k_scale = quantize_kv(k)
+        v, v_scale = quantize_kv(v)
+    return q, k, v, lengths, q_pos, page_blocks, k_scale, v_scale
+
+
+@pytest.mark.parametrize("case", SWEEP, ids=lambda c: c.id)
+@pytest.mark.parametrize("mode", ["decode", "chunk"])
+def test_kernel_matches_jnp(case: Case, mode: str):
+    """Fused kernel == jnp path across the full risky-axis sweep."""
+    C = 1 if mode == "decode" else 8
+    q, k, v, lengths, q_pos, pb, ks, vs = make_case_inputs(case, C=C)
+    m = 1 if case.coarse_only else case.m
+    cfg, cfgk = _cfgs(case)
+    kw = dict(decode_blocks=m, page_blocks=pb, k_scale=ks, v_scale=vs)
+    if mode == "decode":
+        ref = mra2_decode_attention(q, k, v, lengths, cfg, **kw)
+        out = mra2_decode_attention(q, k, v, lengths, cfgk, **kw)
+    else:
+        ref = mra2_chunk_attention(q, k, v, lengths, q_pos, cfg, **kw)
+        out = mra2_chunk_attention(q, k, v, lengths, q_pos, cfgk, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-5)
+
+
+def test_kernel_full_budget_equals_exact_oracle():
+    """Budget >= all live pages: the kernel == exact softmax attention —
+    an implementation-independent anchor (same as the jnp-path pin)."""
+    case = Case(ragged=True, group=2, seed=7)
+    q, k, v, lengths, q_pos, pb, ks, vs = make_case_inputs(case, C=8, min_len=8)
+    _, cfgk = _cfgs(case)
+    out = mra2_chunk_attention(q, k, v, lengths, q_pos, cfgk,
+                               decode_blocks=case.S // case.b)
+    exact = full_chunk_attention(q, k, v, lengths, q_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exact), atol=1e-4)
+
+
+def test_kernel_decode_equals_chunk_c1():
+    """Kernel route: decode is the C == 1 chunk, same as the jnp contract."""
+    case = Case(ragged=True, group=2, seed=3)
+    q, k, v, lengths, q_pos, pb, ks, vs = make_case_inputs(case, C=1)
+    _, cfgk = _cfgs(case)
+    dec = mra2_decode_attention(q, k, v, lengths, cfgk, decode_blocks=2)
+    chk = mra2_chunk_attention(q, k, v, lengths, (lengths - 1)[:, None], cfgk,
+                               decode_blocks=2)
+    np.testing.assert_allclose(np.asarray(chk), np.asarray(dec), atol=1e-6)
+
+
+def test_kernel_with_incremental_pyramid():
+    """The engine's real dataflow: the pyramid block sums ride in instead of
+    being recomputed from the cache; kernel == jnp on that path too."""
+    case = Case(seed=11)
+    q, k, v, lengths, q_pos, _, _, _ = make_case_inputs(case, C=1)
+    B, Hkv, S, D, b = case.B, case.Hkv, case.S, case.D, case.b
+    nb = S // b
+    mask = paged_position_mask(lengths, identity_page_table(B, nb), S,
+                               b).astype(jnp.float32)
+    pyr = PyramidState(
+        jnp.sum((k * mask[:, None, :, None]).reshape(B, Hkv, nb, b, D), axis=3),
+        jnp.sum((v * mask[:, None, :, None]).reshape(B, Hkv, nb, b, D), axis=3))
+    cfg, cfgk = _cfgs(case)
+    ref = mra2_decode_attention(q, k, v, lengths, cfg, decode_blocks=2,
+                                pyramid=pyr)
+    out = mra2_decode_attention(q, k, v, lengths, cfgk, decode_blocks=2,
+                                pyramid=pyr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_pyramid_append_past_capacity_is_dropped():
+    """Regression (PR 5): ``PyramidState.append`` at ``pos >= nb * block``
+    used to scatter at an out-of-range block index, which JAX clamps to
+    ``nb - 1`` — silently corrupting the last block's sums. Past-capacity
+    appends must be no-ops per slot (ring streams that outlive the capacity
+    go through ``ring_pyramid_update`` instead)."""
+    r = np.random.default_rng(0)
+    B, Hkv, D, nb, block = 2, 2, 4, 4, 8
+    kn = r.standard_normal((B, Hkv, D)).astype(np.float32)
+    vn = r.standard_normal((B, Hkv, D)).astype(np.float32)
+    pyr = PyramidState.init(B, Hkv, nb, D)
+    # slot 0 in capacity (lands in block 1), slot 1 exactly at capacity
+    pyr = pyr.append(jnp.asarray(kn), jnp.asarray(vn),
+                     jnp.asarray([block + 3, nb * block]), block)
+    np.testing.assert_allclose(np.asarray(pyr.k_sum)[0, :, 1], kn[0], atol=0)
+    assert np.abs(np.asarray(pyr.k_sum)[1]).max() == 0.0  # dropped, not clamped
+    assert np.abs(np.asarray(pyr.v_sum)[1]).max() == 0.0
+    # way past capacity: still a no-op, nothing NaNs or wraps
+    pyr2 = pyr.append(jnp.asarray(kn), jnp.asarray(vn),
+                      jnp.asarray([10 * nb * block, nb * block + 1]), block)
+    np.testing.assert_array_equal(np.asarray(pyr2.k_sum), np.asarray(pyr.k_sum))
+    np.testing.assert_array_equal(np.asarray(pyr2.v_sum), np.asarray(pyr.v_sum))
+
+
+def test_kernel_is_forward_only():
+    """The serving kernel must refuse differentiation loudly (training goes
+    through the §3 block-sparse kernels, not this op)."""
+    case = Case()
+    q, k, v, lengths, q_pos, _, _, _ = make_case_inputs(case, C=1)
+    _, cfgk = _cfgs(case)
+
+    def loss(q):
+        return jnp.sum(mra2_decode_attention(q, k, v, lengths, cfgk,
+                                             decode_blocks=2))
+
+    with pytest.raises(NotImplementedError, match="forward-only"):
+        jax.grad(loss)(q)
+
+
+# --------------------------------------------------------------------------- #
+# Engine-level conformance: the kernel serves the same tokens (test_engine.py
+# pins the jnp engine to the oracle; this pins the kernel engine to the jnp
+# engine, closing the chain end-to-end through prefill_chunk / decode_step).
+# --------------------------------------------------------------------------- #
+def _engine_requests():
+    from repro.serve import Request, SamplingParams
+
+    return [
+        Request(prompt=np.arange(1, 20), max_new_tokens=6,
+                sampling=SamplingParams(temperature=0.9, seed=7)),
+        Request(prompt=np.array([5, 11, 2]), max_new_tokens=2,
+                sampling=SamplingParams(temperature=1.0, top_k=5, seed=3)),
+        Request(prompt=np.arange(2, 12), max_new_tokens=4),  # greedy
+    ]
+
+
+def test_engine_kernel_path_matches_jnp_engine():
+    """Ragged continuous batching through the fused kernel emits identical
+    token streams (chunked prefill + decode waves both route through it)."""
+    from repro.configs import get_smoke_config
+    from repro.models import get_model, init_params
+    from repro.serve import Engine
+
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = init_params(get_model(cfg).param_specs(cfg), jax.random.PRNGKey(0))
+    ref = Engine(cfg, params, slots=3, max_len=64, chunk=8).run(
+        _engine_requests())
+    kcfg = cfg.replace(attn_use_kernel=True, attn_interpret=True)
+    got = Engine(kcfg, params, slots=3, max_len=64, chunk=8).run(
+        _engine_requests())
+    by = {len(r.prompt): r.out for r in ref}
+    for r in got:
+        np.testing.assert_array_equal(r.out, by[len(r.prompt)])
+
+
+def test_engine_kernel_path_speculative_matches_jnp_engine():
+    """Speculative serving through the kernel: the coarse-only draft steps,
+    the chunked verify dispatch, and ring eviction all hit the fused path
+    and still emit the jnp engine's exact tokens (DESIGN.md §10 + §11)."""
+    from repro.configs import get_smoke_config
+    from repro.models import get_model, init_params
+    from repro.serve import Engine, Request
+
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = init_params(get_model(cfg).param_specs(cfg), jax.random.PRNGKey(0))
+
+    def reqs():
+        return [Request(prompt=np.arange(1, 9), max_new_tokens=20),  # evicts
+                Request(prompt=np.array([5, 11, 2]), max_new_tokens=6)]
+
+    ref = Engine(cfg, params, slots=2, max_len=32, chunk=8, spec_k=3).run(reqs())
+    kcfg = cfg.replace(attn_use_kernel=True, attn_interpret=True)
+    eng = Engine(kcfg, params, slots=2, max_len=32, chunk=8, spec_k=3)
+    got = eng.run(reqs())
+    by = {len(r.prompt): r.out for r in ref}
+    for r in got:
+        np.testing.assert_array_equal(r.out, by[len(r.prompt)])
+    assert eng.stats["spec_rounds"] > 0

@@ -213,6 +213,25 @@ def test_chunk_attention_c1_equals_decode_attention():
     np.testing.assert_allclose(np.asarray(chk), np.asarray(dec), atol=1e-6)
 
 
+def test_full_decode_zero_length_slot_returns_zeros():
+    """Regression (PR 5): ``full_decode_attention`` on a length-0 slot used to
+    softmax uniformly over the finite NEG_INF sentinel and emit a garbage
+    V-average; the oracles must agree — all-masked rows are zeros, exactly
+    like ``full_chunk_attention`` (and the MRA paths' ``alive`` guard)."""
+    from repro.core.mra_decode import full_chunk_attention, full_decode_attention
+
+    r = np.random.default_rng(4)
+    B, Hq, Hkv, S, D = 3, 4, 2, 32, 8
+    q = jnp.asarray(r.standard_normal((B, Hq, 1, D)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((B, Hkv, S, D)), jnp.float32)
+    lengths = jnp.asarray([0, 17, 32], jnp.int32)
+    dec = full_decode_attention(q, k, v, lengths)
+    chk = full_chunk_attention(q, k, v, lengths, (lengths - 1)[:, None])
+    assert float(jnp.abs(dec[0]).max()) == 0.0  # all-masked row -> zeros
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(chk), atol=1e-6)
+
+
 def test_chunk_attention_full_budget_exact():
     """With budget >= all live pages, chunk attention == the exact oracle."""
     from repro.core.mra import MraConfig

@@ -122,6 +122,60 @@ def test_train_step_parity(use_kernel):
     assert "OK" in out
 
 
+def test_decode_chunk_kernel_parity():
+    """The fused Pallas serving kernel (kernels/chunk_attn.py, interpret
+    mode) under the DP=2 x TP=4 shard_map == single device — decode and
+    chunked prefill, paged ring table and int8 scales riding along
+    (DESIGN.md §11: the per-shard pallas_call sees only its own (batch,
+    kv-head) slice; page tables and q_pos shard over batch)."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.attention import AttentionSpec, chunk_attention, \\
+            decode_attention
+        from repro.core.mra_decode import quantize_kv
+        from repro.distributed import mesh_utils
+        from repro.launch.mesh import make_local_mesh
+
+        r = np.random.default_rng(0)
+        B, Hq, Hkv, S, D, b, C = 4, 8, 4, 64, 8, 16, 8
+        nb = S // b
+        k = jnp.asarray(r.standard_normal((B, Hkv, S, D)), jnp.float32)
+        v = jnp.asarray(r.standard_normal((B, Hkv, S, D)), jnp.float32)
+        q = jnp.asarray(r.standard_normal((B, Hq, C, D)), jnp.float32)
+        q1 = jnp.asarray(r.standard_normal((B, Hq, 1, D)), jnp.float32)
+        lengths = jnp.asarray([37, 64, 20, 55], jnp.int32)
+        q_pos = jnp.maximum(lengths[:, None] - C, 0) + jnp.arange(C)
+        # ring layout for two slots: 1.5x-capacity streams
+        lengths_ring = jnp.asarray([96, 96, 20, 55], jnp.int32)
+        pb = jnp.broadcast_to(jnp.arange(nb, dtype=jnp.int32)[None], (B, nb))
+        pb = pb.at[:2].set(jnp.roll(pb[:2] + nb // 2, nb // 2, axis=1))
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        spec = AttentionSpec(kind="mra2", block_size=b, decode_blocks=2,
+                             use_kernel=True, interpret=True)
+        mesh = make_local_mesh(2, 4)
+
+        ref = jax.jit(lambda q: chunk_attention(q, k, v, lengths, q_pos,
+                                                spec))(q)
+        with mesh_utils.use_mesh(mesh):
+            got = jax.jit(lambda q: chunk_attention(
+                q, k, v, lengths, q_pos, spec.replace(shard=True)))(q)
+        cerr = float(jnp.abs(ref - got).max())
+        ref = jax.jit(lambda q: decode_attention(
+            q, kq, vq, lengths_ring, spec, page_blocks=pb, k_scale=ks,
+            v_scale=vs))(q1)
+        with mesh_utils.use_mesh(mesh):
+            got = jax.jit(lambda q: decode_attention(
+                q, kq, vq, lengths_ring, spec.replace(shard=True),
+                page_blocks=pb, k_scale=ks, v_scale=vs))(q1)
+        derr = float(jnp.abs(ref - got).max())
+        assert cerr < 1e-5, cerr
+        assert derr < 1e-5, derr
+        print("OK", cerr, derr)
+    """)
+    assert "OK" in out
+
+
 def test_serve_step_parity():
     """decode_step over the sharded cache (+pyramid) matches single device."""
     out = _run("""
