@@ -12,6 +12,11 @@ smoke-scale model and reports production serving metrics:
 
 Mesh-aware like decode_bench: under ``--mesh DxM`` the engine places
 params/KV by ParamSpec axes and serves tensor-parallel.
+
+Also serves the recurrent/hybrid families (rwkv6, recurrentgemma) through
+the same engine via the per-layer cache protocol (DESIGN.md §12), reporting
+req/s, tok/s, and the chunked-recurrent-prefill dispatch ratio vs. token
+replay (acceptance: >= 5x).
 """
 from __future__ import annotations
 
@@ -23,7 +28,7 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.distributed import mesh_utils
 from repro.models import get_model, init_params
-from repro.serve import Engine, Request, SamplingParams
+from repro.serve import Engine, EngineConfig, Request, SamplingParams
 
 
 def _requests(rng, vocab, lens, new_tokens):
@@ -49,8 +54,8 @@ def run(emit):
     mixes = {"short": [8, 12, 5, 9, 14, 7], "mixed": [8, 128, 24, 96, 12, 64]}
     for slots in (2, 4):
         for mix_name, lens in mixes.items():
-            eng = Engine(cfg, params, slots=slots, max_len=256, chunk=chunk,
-                         mesh=mesh)
+            eng = Engine(cfg, params, EngineConfig(
+                slots=slots, max_len=256, chunk=chunk, mesh=mesh))
             reqs = _requests(rng, cfg.vocab, lens, new_tokens)
             eng.run(reqs[:1])  # warmup: compile prefill + decode + sample
             eng.reset_stats()
@@ -71,7 +76,8 @@ def run(emit):
 
     # dispatch economy: one 128-token prompt through chunked prefill vs. the
     # token-replay baseline (= prompt_len decode dispatches, the pre-§9 engine)
-    eng = Engine(cfg, params, slots=2, max_len=256, chunk=chunk, mesh=mesh)
+    eng = Engine(cfg, params, EngineConfig(
+        slots=2, max_len=256, chunk=chunk, mesh=mesh))
     prompt_len = 128
     t0 = time.perf_counter()
     eng.run([Request(prompt=rng.integers(1, cfg.vocab, size=prompt_len),
@@ -92,10 +98,12 @@ def run(emit):
     kcfg = cfg.replace(attn_use_kernel=True, attn_interpret=interpret)
     lens = [8, 12, 5]
     reqs = _requests(rng, cfg.vocab, lens, new_tokens)
-    ref = Engine(cfg, params, slots=2, max_len=64, chunk=8, mesh=mesh).run(
+    ref = Engine(cfg, params, EngineConfig(
+        slots=2, max_len=64, chunk=8, mesh=mesh)).run(
         [Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens,
                  sampling=r.sampling) for r in reqs])
-    eng = Engine(kcfg, params, slots=2, max_len=64, chunk=8, mesh=mesh)
+    eng = Engine(kcfg, params, EngineConfig(
+        slots=2, max_len=64, chunk=8, mesh=mesh))
     eng.run(reqs[:1])  # warmup: compile the kernel-path prefill + decode
     eng.reset_stats()
     t0 = time.perf_counter()
@@ -107,6 +115,38 @@ def run(emit):
     emit("serve_kernel_tok_per_s", dt / max(gen, 1) * 1e6,
          f"{gen / dt:.1f} tokens_match={match}")
     assert match
+
+    # recurrent/hybrid families through the same engine (DESIGN.md §12):
+    # rwkv6's O(1) wkv state and recurrentgemma's RG-LRU + window ring serve
+    # under identical continuous batching; the dispatch-economy claim is the
+    # chunked recurrent prefill vs. token-by-token state replay
+    for arch in ("rwkv6-7b", "recurrentgemma-9b"):
+        rcfg = get_smoke_config(arch).replace(attn_shard=mesh is not None)
+        rparams = init_params(get_model(rcfg).param_specs(rcfg),
+                              jax.random.PRNGKey(0))
+        lens = [8, 96, 24, 64, 12, 48]
+        eng = Engine(rcfg, rparams, EngineConfig(
+            slots=4, max_len=256, chunk=chunk, mesh=mesh))
+        reqs = _requests(rng, rcfg.vocab, lens, new_tokens)
+        eng.run(reqs[:1])  # warmup: compile prefill + decode + sample
+        eng.reset_stats()
+        t0 = time.perf_counter()
+        done = eng.run(reqs)
+        dt = time.perf_counter() - t0
+        assert len(done) == len(reqs)
+        gen = eng.stats["generated_tokens"]
+        pre_tok = eng.stats["prefill_tokens"]
+        pre_disp = eng.stats["prefill_dispatches"]
+        ratio = pre_tok / max(pre_disp, 1)
+        tag = arch.split("-")[0]
+        emit(f"serve_{tag}_req_per_s", dt / max(len(reqs), 1) * 1e6,
+             f"{len(reqs) / dt:.2f}")
+        emit(f"serve_{tag}_tok_per_s", dt / max(gen, 1) * 1e6,
+             f"{gen / dt:.1f}")
+        emit(f"serve_{tag}_prefill_dispatch_ratio", dt * 1e6,
+             f"{pre_disp} dispatches for {pre_tok} tokens "
+             f"({ratio:.0f}x fewer than replay)")
+        assert ratio >= 5.0, (pre_disp, pre_tok)
 
 
 def main() -> None:

@@ -32,7 +32,7 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.distributed import mesh_utils
 from repro.models import get_model, init_params
-from repro.serve import Engine, Request, SamplingParams
+from repro.serve import Engine, EngineConfig, Request, SamplingParams
 
 
 def _requests(rng, vocab):
@@ -48,8 +48,8 @@ def _requests(rng, vocab):
 
 
 def _run_engine(cfg, params, rng, spec_k, mesh):
-    eng = Engine(cfg, params, slots=3, max_len=64, chunk=8, spec_k=spec_k,
-                 mesh=mesh)
+    eng = Engine(cfg, params, EngineConfig(
+        slots=3, max_len=64, chunk=8, spec_k=spec_k, mesh=mesh))
     eng.run(_requests(rng, cfg.vocab)[:1])  # warmup: compile all dispatches
     eng.reset_stats()
     t0 = time.perf_counter()

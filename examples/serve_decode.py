@@ -17,17 +17,22 @@ import numpy as np
 from repro.checkpoint import latest_step, restore
 from repro.configs import get_smoke_config
 from repro.models import get_model, init_params
-from repro.serve import Engine, Request, SamplingParams
+from repro.serve import Engine, EngineConfig, Request, SamplingParams
+
+RECURRENT_ARCHS = ("rwkv6-7b", "recurrentgemma-9b")
 
 
 def main():
     ap = argparse.ArgumentParser()
-    # the continuous-batching engine serves the token-LM transformer families
-    # (chunked prefill needs prefill_chunk; DESIGN.md §9) — recurrent families
-    # (rwkv6, recurrentgemma) and frontend models are out of its scope
+    # the continuous-batching engine serves every registered family through
+    # the per-layer cache protocol (DESIGN.md §12): transformer archs get the
+    # paged KV cache and the MRA-vs-exact comparison below; recurrent archs
+    # (rwkv6, recurrentgemma) serve through their state caches (one pass, no
+    # attention-kind comparison — rwkv6 has no attention to approximate)
     ap.add_argument("--arch", default="qwen3-1.7b",
                     choices=["qwen3-1.7b", "qwen2-7b", "llama3.2-3b", "yi-6b",
-                             "kimi-k2-1t-a32b", "granite-moe-3b-a800m"])
+                             "kimi-k2-1t-a32b", "granite-moe-3b-a800m",
+                             *RECURRENT_ARCHS])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--chunk", type=int, default=16,
@@ -53,6 +58,39 @@ def main():
     from repro.launch.mesh import parse_mesh
     mesh = parse_mesh(args.mesh)
 
+    def make_requests(cfg):
+        rng = np.random.default_rng(0)
+        return [Request(prompt=rng.integers(1, cfg.vocab, size=ln),
+                        max_new_tokens=args.new_tokens,
+                        sampling=SamplingParams(
+                            temperature=args.temperature, top_k=args.top_k,
+                            top_p=args.top_p, seed=args.seed + i))
+                for i, ln in enumerate((5, 9, 13, 7))]
+
+    if args.arch in RECURRENT_ARCHS:
+        # recurrent/hybrid serving: same engine, state cache backend;
+        # speculation and the MRA serving kernel are paged-KV-only paths
+        if args.spec_k or args.use_kernel:
+            ap.error("--spec-k/--use-kernel need the MRA paged-KV cache "
+                     "(transformer archs)")
+        cfg = get_smoke_config(args.arch).replace(attn_shard=mesh is not None)
+        model = get_model(cfg)
+        params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+        if args.ckpt_dir:
+            step = latest_step(args.ckpt_dir)
+            if step is not None:
+                params = restore(args.ckpt_dir, step, params)
+                print(f"restored checkpoint step {step}")
+        eng = Engine(cfg, params, EngineConfig(
+            slots=4, max_len=128, chunk=args.chunk, mesh=mesh))
+        done = eng.run(make_requests(cfg))
+        print(f"[{args.arch}] generated "
+              f"({eng.stats['prefill_dispatches']} prefill + "
+              f"{eng.stats['decode_dispatches']} decode dispatches):")
+        for r in done:
+            print(f"  req ({len(r.prompt)} prompt toks) -> {r.out.tolist()}")
+        return
+
     outs = {}
     for kind in ("mra2", "full"):
         cfg = get_smoke_config(args.arch)
@@ -75,16 +113,9 @@ def main():
         # speculation needs the MRA pyramid; the exact-attention reference
         # engine always decodes plainly
         spec_k = args.spec_k if kind.startswith("mra") else 0
-        eng = Engine(cfg, params, slots=4, max_len=128, chunk=args.chunk,
-                     spec_k=spec_k, mesh=mesh)
-        rng = np.random.default_rng(0)
-        reqs = [Request(prompt=rng.integers(1, cfg.vocab, size=ln),
-                        max_new_tokens=args.new_tokens,
-                        sampling=SamplingParams(
-                            temperature=args.temperature, top_k=args.top_k,
-                            top_p=args.top_p, seed=args.seed + i))
-                for i, ln in enumerate((5, 9, 13, 7))]
-        done = eng.run(reqs)
+        eng = Engine(cfg, params, EngineConfig(
+            slots=4, max_len=128, chunk=args.chunk, spec_k=spec_k, mesh=mesh))
+        done = eng.run(make_requests(cfg))
         outs[kind] = {len(r.prompt): r.out.tolist() for r in done}
         spec_note = ""
         if spec_k:

@@ -4,9 +4,13 @@
 # kernels run in interpret mode inside the tests — training fwd+bwd
 # (tests/test_differential.py, tests/test_kernels_block_sparse.py) and the
 # fused chunk/decode serving kernel (tests/test_chunk_kernel.py, DESIGN.md
-# §11) — so both TPU paths are exercised end-to-end on every CPU run; the
-# shard tier re-runs the training/serving stack, serving kernel included,
-# under 8 fake host devices (tests/test_shard_parity.py).
+# §11) — so both TPU paths are exercised end-to-end on every CPU run. The
+# fast tier also pins the cross-family serving contract: registry signature
+# conformance (tests/test_registry_contract.py) and the recurrent/hybrid
+# engine's batched == solo guarantees (tests/test_recurrent_engine.py,
+# DESIGN.md §12). The shard tier re-runs the training/serving stack, serving
+# kernel included, under 8 fake host devices (tests/test_shard_parity.py,
+# plus the recurrent-engine DP x TP parity in tests/test_recurrent_engine.py).
 #
 # Usage:
 #   scripts/ci.sh          # fast tier (default: pytest -m "not slow and not shard")

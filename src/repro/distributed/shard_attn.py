@@ -186,3 +186,41 @@ def sharded_chunk_attention(
     return _sharded_kv_attention(
         q, k_cache, v_cache, lengths, spec, q_pos=q_pos, pyramid=pyramid,
         page_blocks=page_blocks, k_scale=k_scale, v_scale=v_scale)
+
+
+def sharded_window_attention(q, k_new, v_new, k_cache, v_cache, kv_pos,
+                             positions, token_valid, *, window: int, hd: int):
+    """shard_map'd sliding-window ring attention (hybrid serving path).
+
+    Same (batch -> data, kv_heads -> model) mapping as the MRA decode state:
+    the ring cache and chunk projections are per-(batch, kv-head)
+    independent, while ``kv_pos`` (ring entry positions, shared across kv
+    heads), ``positions`` and ``token_valid`` shard over batch only. Returns
+    None when the mesh can't shard it (caller falls through to the
+    bit-identical single-device core).
+    """
+    mesh = mesh_utils.get_mesh()
+    if mesh is None:
+        return None
+    parts = attention_partition(mesh, q.shape[0], k_cache.shape[1])
+    if parts is None:
+        return None
+    bpart, hpart = parts
+    s4 = P(bpart, hpart, None, None)
+    s2 = P(bpart, None)
+
+    args = {"q": q, "kn": k_new, "vn": v_new, "kc": k_cache, "vc": v_cache,
+            "pc": kv_pos, "pos": positions, "tv": token_valid}
+    in_specs = {"q": s4, "kn": s4, "vn": s4, "kc": s4, "vc": s4,
+                "pc": s2, "pos": s2, "tv": s2}
+
+    def body(a):
+        from repro.models.recurrentgemma import window_attention_core
+
+        return window_attention_core(
+            a["q"], a["kn"], a["vn"], a["kc"], a["vc"], a["pc"], a["pos"],
+            a["tv"], window=window, hd=hd)
+
+    return mesh_utils.shard_map(
+        body, mesh, in_specs=(in_specs,), out_specs=s4, check_rep=False
+    )(args)

@@ -41,17 +41,23 @@ def _rglru_specs(cfg: ModelConfig):
     d = cfg.d_model
     w = cfg.lru_width or cfg.d_model
     pdt = cfg.pdt
+    # The lru_width axis is deliberately REPLICATED (no "d_ff"): the RG-LRU
+    # recurrence is elementwise and sequential, so TP over w buys nothing on
+    # the hot path but forces psum'd partial contractions (wa/wi/wo) whose
+    # reassociated rounding drifts from single-device — breaking the
+    # bit-exact DP x TP serving parity the engine pins (DESIGN.md §12).
+    # Batch-only sharding keeps every LRU contraction local and exact.
     return {
-        "wx": ParamSpec((d, w), ("d_model", "d_ff"), dtype=pdt),
-        "wy": ParamSpec((d, w), ("d_model", "d_ff"), dtype=pdt),
-        "conv_w": ParamSpec((cfg.conv1d_width, w), (None, "d_ff"), dtype=pdt, scale=0.1),
-        "conv_b": ParamSpec((w,), ("d_ff",), dtype=pdt, init="zeros"),
-        "wa": ParamSpec((w, w), ("d_ff", None), dtype=pdt, scale=0.01),
+        "wx": ParamSpec((d, w), ("d_model", None), dtype=pdt),
+        "wy": ParamSpec((d, w), ("d_model", None), dtype=pdt),
+        "conv_w": ParamSpec((cfg.conv1d_width, w), (None, None), dtype=pdt, scale=0.1),
+        "conv_b": ParamSpec((w,), (None,), dtype=pdt, init="zeros"),
+        "wa": ParamSpec((w, w), (None, None), dtype=pdt, scale=0.01),
         "ba": ParamSpec((w,), (None,), dtype=pdt, init="zeros"),
-        "wi": ParamSpec((w, w), ("d_ff", None), dtype=pdt, scale=0.01),
+        "wi": ParamSpec((w, w), (None, None), dtype=pdt, scale=0.01),
         "bi": ParamSpec((w,), (None,), dtype=pdt, init="zeros"),
-        "lam": ParamSpec((w,), ("d_ff",), dtype=pdt, init="embed", scale=0.5),
-        "wo": ParamSpec((w, d), ("d_ff", "d_model"), dtype=pdt),
+        "lam": ParamSpec((w,), (None,), dtype=pdt, init="embed", scale=0.5),
+        "wo": ParamSpec((w, d), (None, "d_model"), dtype=pdt),
     }
 
 
@@ -221,38 +227,85 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
                        (None, "batch", None, None, None), dtype=cfg.adt, init="zeros"),
         "v": ParamSpec((n_attn, batch, cfg.kv_heads, W, cfg.hd),
                        (None, "batch", None, None, None), dtype=cfg.adt, init="zeros"),
+        # -1 = empty ring entry; zeros would alias an unwritten entry with a
+        # real position-0 key of all-zero K/V (visible as spurious attention
+        # mass on fresh slots)
         "kv_pos": ParamSpec((n_attn, batch, W), (None, "batch", None),
-                            dtype=jnp.int32, init="zeros"),
-        "h": ParamSpec((n_rec, batch, w), (None, "batch", "d_ff"),
+                            dtype=jnp.int32, init="fill", scale=-1),
+        # batch-only, matching _rglru_specs: a w-sharded fp32 state would
+        # re-introduce the psum drift the replicated LRU weights avoid
+        "h": ParamSpec((n_rec, batch, w), (None, "batch", None),
                        dtype=jnp.float32, init="zeros"),
         "conv": ParamSpec((n_rec, batch, cfg.conv1d_width - 1, w),
-                          (None, "batch", None, "d_ff"), dtype=cfg.adt, init="zeros"),
+                          (None, "batch", None, None), dtype=cfg.adt, init="zeros"),
         "lengths": ParamSpec((batch,), ("batch",), dtype=jnp.int32, init="zeros"),
     }
 
 
-def _ring_decode_attn(q, kc, vc, pos_c, pos_now, cfg: ModelConfig):
-    """Decode attention over a ring-buffer window cache.
+def window_attention_core(q, k_new, v_new, kc, vc, pos_c, positions, tv, *,
+                          window: int, hd: int):
+    """Exact sliding-window attention for a serving chunk over a ring cache.
 
-    q (B,H,1,hd); kc/vc (B,1,W,hd); pos_c (B,W) absolute positions (-1 empty).
+    q (B,Hq,C,hd) and k_new/v_new (B,Hkv,C,hd) are the chunk's projections;
+    kc/vc (B,Hkv,W,hd) + pos_c (B,W) are the ring *as of the chunk start*
+    (-1 = empty entry); positions (B,C) absolute query positions; tv (B,C)
+    lane validity. Query t attends ring entries in its window plus chunk
+    keys s <= t — exactly the keys a token-by-token replay would see, so
+    chunked prefill is causality-exact regardless of how the stream was
+    chunked (the chunk's writes happen only *after* this attention; a write
+    during the chunk could recycle a ring entry an earlier query needs).
+    Decode is the C == 1 special case. Pure in its static kwargs so the
+    shard_map wrapper (distributed/shard_attn.py) can run it per-shard.
     """
-    B, Hq = q.shape[:2]
-    scale = 1.0 / (cfg.hd ** 0.5)
-    qg = q.reshape(B, 1, Hq, cfg.hd).astype(jnp.float32)
-    s = jnp.einsum("bkhd,bkjd->bhj", qg, kc.astype(jnp.float32)) * scale
-    ok = (pos_c >= 0) & (pos_c <= pos_now[:, None]) & (
-        pos_c > pos_now[:, None] - cfg.local_window
-    )
-    s = jnp.where(ok[:, None, :], s, -1e9)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhj,bkjd->bhd", p, vc.astype(jnp.float32))
-    return o.reshape(B, Hq, 1, cfg.hd).astype(q.dtype)
+    B, Hq, C, _ = q.shape
+    Hkv, W = kc.shape[1], kc.shape[2]
+    G = Hq // Hkv  # GQA/MQA: query heads stay with their kv-head group
+    scale = 1.0 / (hd ** 0.5)
+    qf = q.reshape(B, Hkv, G, C, hd).astype(jnp.float32) * scale
+    pq = positions[:, :, None]  # (B,C,1)
+    # ring part: keys written before the chunk, inside the query's window
+    sr = jnp.einsum("bkgtd,bkwd->bkgtw", qf, kc.astype(jnp.float32))
+    pr = pos_c[:, None, :]  # (B,1,W)
+    ok_r = (pr >= 0) & (pr < pq) & (pr > pq - window)  # (B,C,W)
+    sr = jnp.where(ok_r[:, None, None], sr, -1e9)
+    # intra-chunk part: valid causal keys inside the window (incl. self)
+    sc = jnp.einsum("bkgtd,bksd->bkgts", qf, k_new.astype(jnp.float32))
+    rel = pq - positions[:, None, :]  # (B,C,C) query pos - key pos
+    ok_c = tv[:, None, :] & (rel >= 0) & (rel < window)
+    sc = jnp.where(ok_c[:, None, None], sc, -1e9)
+    p = jax.nn.softmax(jnp.concatenate([sr, sc], axis=-1), axis=-1)
+    o = (jnp.einsum("bkgtw,bkwd->bkgtd", p[..., :W], vc.astype(jnp.float32))
+         + jnp.einsum("bkgts,bksd->bkgtd", p[..., W:],
+                      v_new.astype(jnp.float32)))
+    return o.reshape(B, Hq, C, hd).astype(q.dtype)
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens):
+def _window_attention(q, k_new, v_new, kc, vc, pos_c, positions, tv,
+                      cfg: ModelConfig):
+    """Serving window attention; shard_map'd under a mesh when cfg asks."""
+    if cfg.attn_spec.shard:
+        from repro.distributed.shard_attn import sharded_window_attention
+
+        out = sharded_window_attention(q, k_new, v_new, kc, vc, pos_c,
+                                       positions, tv,
+                                       window=cfg.local_window, hd=cfg.hd)
+        if out is not None:
+            return out
+    return window_attention_core(q, k_new, v_new, kc, vc, pos_c, positions,
+                                 tv, window=cfg.local_window, hd=cfg.hd)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, active=None):
+    """One serving decode step; ``active`` (B,) bool freezes inactive slots.
+
+    Frozen slots (active=False) keep every cache leaf bit-identical: all
+    writes are ``jnp.where``-guarded on the mask rather than relying on
+    arithmetic no-ops (-0.0 + 0.0 == +0.0 would silently flip sign bits).
+    """
     B = tokens.shape[0]
-    lengths = cache["lengths"] + 1
-    pos_now = lengths - 1  # (B,)
+    act = jnp.ones((B,), bool) if active is None else active.astype(bool)
+    lengths = cache["lengths"] + act.astype(cache["lengths"].dtype)
+    pos_now = lengths - 1  # (B,); -1 on frozen empty slots (writes masked)
     x = L.embed(tokens[:, None], params["embed"], cfg)  # (B,1,d)
     new_cache = dict(cache)
     b_idx = jnp.arange(B)
@@ -262,16 +315,22 @@ def decode_step(params, cfg: ModelConfig, cache, tokens):
         h = L.apply_norm(x, p["ln1"], cfg)
         if kind == "local":
             q, k_new, v_new = L.qkv_project(h, p["attn"], cfg, pos_now[:, None])
-            slot = pos_now % W
-            kc = new_cache["k"][ia].at[b_idx, :, slot].set(
-                k_new[:, :, 0].astype(cache["k"].dtype))
-            vc = new_cache["v"][ia].at[b_idx, :, slot].set(
-                v_new[:, :, 0].astype(cache["v"].dtype))
-            pc = new_cache["kv_pos"][ia].at[b_idx, slot].set(pos_now)
-            new_cache["k"] = new_cache["k"].at[ia].set(kc)
-            new_cache["v"] = new_cache["v"].at[ia].set(vc)
-            new_cache["kv_pos"] = new_cache["kv_pos"].at[ia].set(pc)
-            o = _ring_decode_attn(q, kc, vc, pc, pos_now, cfg)
+            kc, vc = new_cache["k"][ia], new_cache["v"][ia]
+            pc = new_cache["kv_pos"][ia]
+            # attend before writing: ring as-of-step-start + self via the
+            # chunk part (so a wrapping write can't evict a needed entry)
+            o = _window_attention(q, k_new, v_new, kc, vc, pc,
+                                  pos_now[:, None], act[:, None], cfg)
+            slot = pos_now % W  # -1 % W == W-1: in-bounds, write masked
+            kw = kc.at[b_idx, :, slot].set(k_new[:, :, 0].astype(kc.dtype))
+            vw = vc.at[b_idx, :, slot].set(v_new[:, :, 0].astype(vc.dtype))
+            pw = pc.at[b_idx, slot].set(pos_now)
+            new_cache["k"] = new_cache["k"].at[ia].set(
+                jnp.where(act[:, None, None, None], kw, kc))
+            new_cache["v"] = new_cache["v"].at[ia].set(
+                jnp.where(act[:, None, None, None], vw, vc))
+            new_cache["kv_pos"] = new_cache["kv_pos"].at[ia].set(
+                jnp.where(act[:, None], pw, pc))
             x = x + jnp.einsum("bhsk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))
             ia += 1
         else:
@@ -285,13 +344,16 @@ def decode_step(params, cfg: ModelConfig, cache, tokens):
             cw = pr["conv_w"].astype(adt)
             u = sum(xp[:, i] * cw[i] for i in range(K)) + pr["conv_b"].astype(adt)
             new_cache["conv"] = new_cache["conv"].at[ir].set(
-                xp[:, 1:].astype(cache["conv"].dtype))
+                jnp.where(act[:, None, None],
+                          xp[:, 1:].astype(cache["conv"].dtype), conv_st))
             uf = u.astype(jnp.float32)
             r = jax.nn.sigmoid(uf @ pr["wa"].astype(jnp.float32) + pr["ba"].astype(jnp.float32))
             i_g = jax.nn.sigmoid(uf @ pr["wi"].astype(jnp.float32) + pr["bi"].astype(jnp.float32))
             a, mult = _decay(pr["lam"], r)
-            hst = a * new_cache["h"][ir] + mult * (i_g * uf)
-            new_cache["h"] = new_cache["h"].at[ir].set(hst)
+            h0 = new_cache["h"][ir]
+            hst = a * h0 + mult * (i_g * uf)
+            new_cache["h"] = new_cache["h"].at[ir].set(
+                jnp.where(act[:, None], hst, h0))
             out = hst.astype(adt) * y
             x = x + jnp.einsum("bw,wd->bd", out, pr["wo"].astype(adt))[:, None]
             ir += 1
@@ -354,3 +416,108 @@ def prefill(params, cfg: ModelConfig, batch, cache):
     logits = L.unembed(x[:, -1:], params["embed"], cfg)
     new_cache["lengths"] = jnp.full_like(cache["lengths"], S)
     return logits[:, 0], new_cache
+
+
+def layer_cache_kinds(cfg: ModelConfig):
+    """Per-layer cache kinds for the serving cache factory (DESIGN.md §12).
+
+    The hybrid pattern maps local-attention layers to sliding-window ring
+    entries and RG-LRU layers to O(1) recurrent state — both live in the
+    same HybridWindowCache tree, selected here per layer."""
+    return ["window" if k == "local" else "rglru" for k in _pattern(cfg)]
+
+
+def prefill_chunk(params, cfg: ModelConfig, cache, tokens, num_valid, *,
+                  all_logits=False, collect_kv=False):
+    """Ragged chunked prefill: per-slot ``num_valid`` tokens of (B,C) land in
+    the serving cache in one dispatch (DESIGN.md §12).
+
+    Invalid lanes are inert: window layers drop their ring writes (OOB
+    scatter index + mode="drop"), RG-LRU layers ride the state through with
+    decay 1 / input 0 lanes and ``where``-guarded state writes, so a slot
+    fed 0 tokens stays bit-identical. The engine clamps C to the window
+    (``HybridWindowCache.chunk_cap``) so a chunk's ring scatter indices are
+    distinct — two chunk tokens may not recycle the same ring entry inside
+    one dispatch.
+    """
+    if collect_kv:
+        raise NotImplementedError(
+            "speculative drafting needs the MRA paged-KV cache; the hybrid "
+            "window cache does not collect per-chunk K/V")
+    B, C = tokens.shape
+    nv = num_valid.astype(jnp.int32)
+    positions = cache["lengths"][:, None] + jnp.arange(C)[None, :]  # (B,C)
+    tv = jnp.arange(C)[None, :] < nv[:, None]  # (B,C) lane validity
+    gate = nv > 0
+    x = L.embed(tokens, params["embed"], cfg)
+    new_cache = dict(cache)
+    b_idx = jnp.arange(B)
+    ia = ir = 0
+    W = cache["k"].shape[3]
+    Kw = cfg.conv1d_width
+    for kind, p in _layers_iter(params, cfg):
+        h = L.apply_norm(x, p["ln1"], cfg)
+        if kind == "local":
+            q, k, v = L.qkv_project(h, p["attn"], cfg, positions)
+            kc, vc = new_cache["k"][ia], new_cache["v"][ia]
+            pc = new_cache["kv_pos"][ia]
+            o = _window_attention(q, k, v, kc, vc, pc, positions, tv, cfg)
+            x = x + jnp.einsum("bhsk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))
+            # valid chunk tokens into the ring at pos % W; invalid lanes get
+            # index W (out of bounds) and are dropped — with C <= W the valid
+            # indices within a row are distinct, so scatter order can't matter
+            widx = jnp.where(tv, positions % W, W)  # (B,C)
+            new_cache["k"] = new_cache["k"].at[ia].set(
+                kc.at[b_idx[:, None], :, widx].set(
+                    k.transpose(0, 2, 1, 3).astype(kc.dtype), mode="drop"))
+            new_cache["v"] = new_cache["v"].at[ia].set(
+                vc.at[b_idx[:, None], :, widx].set(
+                    v.transpose(0, 2, 1, 3).astype(vc.dtype), mode="drop"))
+            new_cache["kv_pos"] = new_cache["kv_pos"].at[ia].set(
+                pc.at[b_idx[:, None], widx].set(positions, mode="drop"))
+            ia += 1
+        else:
+            pr = p["rglru"]
+            adt = x.dtype
+            u = jnp.einsum("btd,dw->btw", h, pr["wx"].astype(adt))
+            y = jax.nn.gelu(jnp.einsum("btd,dw->btw", h, pr["wy"].astype(adt)))
+            conv_st = new_cache["conv"][ir]  # (B,Kw-1,w)
+            u_conv = _causal_conv(u, pr["conv_w"], pr["conv_b"], state=conv_st)
+            # next conv state: the last Kw-1 *valid* raw inputs, counting the
+            # carried state — row layout [state | u], valid run ends at
+            # index Kw-1+nv, so gather [nv, nv+Kw-1) (== old state when nv=0)
+            xfull = jnp.concatenate([conv_st.astype(adt), u], axis=1)
+            cidx = nv[:, None] + jnp.arange(Kw - 1)[None, :]  # (B,Kw-1)
+            new_conv = jnp.take_along_axis(
+                xfull, cidx[:, :, None], axis=1).astype(conv_st.dtype)
+            new_cache["conv"] = new_cache["conv"].at[ir].set(
+                jnp.where(gate[:, None, None], new_conv, conv_st))
+            uf = u_conv.astype(jnp.float32)
+            r = jax.nn.sigmoid(uf @ pr["wa"].astype(jnp.float32)
+                               + pr["ba"].astype(jnp.float32))
+            i_g = jax.nn.sigmoid(uf @ pr["wi"].astype(jnp.float32)
+                                 + pr["bi"].astype(jnp.float32))
+            a, mult = _decay(pr["lam"], r)
+            # invalid lanes: decay exactly 1, input exactly 0 — the carried
+            # state rides through the scan untouched
+            a_m = jnp.where(tv[:, :, None], a, 1.0)
+            bx_m = jnp.where(tv[:, :, None], mult * (i_g * uf), 0.0)
+            acum, h_scan = _rglru_scan(a_m, bx_m)
+            h0 = new_cache["h"][ir]  # (B,w) fp32
+            hseq = acum * h0[:, None] + h_scan  # (B,C,w)
+            last = jnp.clip(nv - 1, 0, C - 1)
+            h_last = jnp.take_along_axis(hseq, last[:, None, None], axis=1)[:, 0]
+            new_cache["h"] = new_cache["h"].at[ir].set(
+                jnp.where(gate[:, None], h_last, h0))
+            out = hseq.astype(adt) * y
+            x = x + jnp.einsum("btw,wd->btd", out, pr["wo"].astype(adt))
+            ir += 1
+        h = L.apply_norm(x, p["ln2"], cfg)
+        x = x + L.mlp_block(h, p["mlp"], cfg)
+    x = L.apply_norm(x, params["ln_f"], cfg)
+    new_cache["lengths"] = cache["lengths"] + nv
+    if all_logits:
+        return L.unembed(x, params["embed"], cfg), new_cache
+    last = jnp.clip(nv - 1, 0, C - 1)
+    xl = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    return L.unembed(xl, params["embed"], cfg)[:, 0], new_cache

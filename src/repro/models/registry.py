@@ -9,13 +9,19 @@ Every family module provides:
   decode_step(params, cfg, cache, tok,
               active=None)             -> (logits, cache)      [serving]
 
-The continuous-batching engine (serve/engine.py, DESIGN.md §9) additionally
-requires, and the transformer families implement:
-  prefill_chunk(params, cfg, cache, tokens, num_valid) -> (logits, cache)
+The continuous-batching engine (serve/engine.py, DESIGN.md §9/§12)
+additionally requires — and *every* family implements, with identical
+signatures (tests/test_registry_contract.py pins them against drift):
+  layer_cache_kinds(cfg)               -> per-layer cache-kind strings that
+      select the cache backend (serve/cache/): "paged_kv"/"kv" -> ring-paged
+      KV, "wkv" -> recurrent state, "window"/"rglru" -> hybrid window cache
+  prefill_chunk(params, cfg, cache, tokens, num_valid, *,
+                all_logits=False, collect_kv=False) -> (logits, cache)
+      ragged chunked prefill, one dispatch for the whole batch
   decode_step honoring ``active`` (B,) bool — inactive slots' cache rows
   preserved bit-for-bit (slot isolation under ragged batching).
-Families without these (rwkv6, recurrentgemma) still train/prefill/decode
-whole batches but are rejected by Engine at construction.
+A family missing any of these is rejected by Engine at construction with
+the list of missing entry points.
 
 Speculative serving (Engine(spec_k=...), DESIGN.md §10) further leans on
 ``prefill_chunk(..., all_logits=True, collect_kv=True)`` — all-position

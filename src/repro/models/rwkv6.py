@@ -98,15 +98,18 @@ def _layers_iter(params, cfg: ModelConfig):
 # --------------------------------------------------------------------------- #
 # Time mixing
 # --------------------------------------------------------------------------- #
-def _shift(x):
-    """Previous-token values, zero at t=0. x (B,T,d)."""
-    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+def _shift(x, x_prev=None):
+    """Previous-token values. x (B,T,d); ``x_prev`` (B,d) is the stream's
+    token before this window (zeros when the stream starts at t=0)."""
+    if x_prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([x_prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
 
 
-def _tm_inputs(x, p, cfg):
+def _tm_inputs(x, p, cfg, x_prev=None):
     """Compute r,k,v,g (B,H,T,dh) and log-decay lw (B,H,T,dh)."""
     adt = x.dtype
-    xs = _shift(x)
+    xs = _shift(x, x_prev)
     mu = p["mu"].astype(adt)  # (5, d)
     xr, xk, xv, xw, xg = (x + (xs - x) * mu[i] for i in range(5))
     r = jnp.einsum("btd,dhk->bhtk", xr, p["wr"].astype(adt))
@@ -128,8 +131,16 @@ def _tm_inputs(x, p, cfg):
             g, wlog)
 
 
-def wkv_chunked(r, k, v, lw, u, chunk: int):
-    """Chunked-parallel WKV. r/k/v/lw (B,H,T,dh); u (H,dh) -> y (B,H,T,dh)."""
+def wkv_chunked(r, k, v, lw, u, chunk: int, initial_state=None,
+                return_state=False):
+    """Chunked-parallel WKV. r/k/v/lw (B,H,T,dh); u (H,dh) -> y (B,H,T,dh).
+
+    ``initial_state`` (B,H,dh,dh) carries S from a previous window so the
+    serving engine can prefill a prompt chunk-by-chunk (the chunk_rwkv6
+    dual-mode design); ``return_state`` additionally returns the post-window
+    state S_T. Lanes with lw == 0 and k == 0 leave the state untouched, so
+    ragged windows mask by zeroing those inputs past each lane's length.
+    """
     B, H, T, dh = r.shape
     C = chunk
     assert T % C == 0, (T, C)
@@ -155,6 +166,12 @@ def wkv_chunked(r, k, v, lw, u, chunk: int):
     S_prev = jnp.concatenate(
         [jnp.zeros_like(Ms[:, :, :1]), Ms[:, :, :-1]], axis=2
     )
+    if initial_state is not None:
+        S0 = initial_state.astype(jnp.float32)
+        # decay accumulated before each chunk applies to the carried state
+        D_before = jnp.concatenate(
+            [jnp.ones_like(Ds[:, :, :1]), Ds[:, :, :-1]], axis=2)
+        S_prev = S_prev + D_before[..., :, None] * S0[:, :, None]
 
     # intra-chunk: A[t,s] = r_t . exp(Lprev_t - Lc_s) k_s  (s < t), diag u bonus
     # exponents bounded by the per-step decay clamp (see _decay_clamp)
@@ -166,7 +183,13 @@ def wkv_chunked(r, k, v, lw, u, chunk: int):
     diag = jnp.einsum("bhcti,hi,bhcti->bhct", rc, u.astype(jnp.float32), kc)
     y = jnp.einsum("bhcts,bhcsj->bhctj", A, vc) + diag[..., None] * vc
     y = y + jnp.einsum("bhcti,bhcij->bhctj", rq, S_prev)
-    return y.reshape(B, H, T, dh)
+    y = y.reshape(B, H, T, dh)
+    if not return_state:
+        return y
+    S_T = Ms[:, :, -1]
+    if initial_state is not None:
+        S_T = S_T + Ds[:, :, -1][..., :, None] * S0
+    return y, S_T
 
 
 def wkv_scan(r, k, v, lw, u):
@@ -204,9 +227,9 @@ def time_mix(x, p, cfg: ModelConfig, *, use_scan: bool = False):
     return jnp.einsum("bhtk,hkd->btd", y.astype(x.dtype), p["wo"].astype(x.dtype))
 
 
-def channel_mix(x, p, cfg: ModelConfig):
+def channel_mix(x, p, cfg: ModelConfig, x_prev=None):
     adt = x.dtype
-    xs = _shift(x)
+    xs = _shift(x, x_prev)
     xk = x + (xs - x) * p["mu_k"].astype(adt)
     xr = x + (xs - x) * p["mu_r"].astype(adt)
     k = jnp.einsum("btd,df->btf", xk, p["wk"].astype(adt))
@@ -262,9 +285,16 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
     }
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens):
-    """One recurrent step. tokens (B,) -> (logits, cache)."""
+def decode_step(params, cfg: ModelConfig, cache, tokens, active=None):
+    """One recurrent step. tokens (B,) -> (logits, cache).
+
+    ``active`` (B,) bool restricts the step to a subset of slots: inactive
+    slots' state rows (wkv state, token-shift carries, length) are preserved
+    bit-for-bit so ragged continuous batching cannot perturb them, and their
+    logits are garbage to be ignored by the caller. ``None`` = all active.
+    """
     B = tokens.shape[0]
+    act = jnp.ones((B,), bool) if active is None else active.astype(bool)
     x = L.embed(tokens[:, None], params["embed"], cfg)[:, 0]  # (B, d)
     new_cache = dict(cache)
     d = cfg.d_model
@@ -284,16 +314,21 @@ def decode_step(params, cfg: ModelConfig, cache, tokens):
             "bl,ld->bd", jnp.tanh(jnp.einsum("bd,dl->bl", xw, p["tm"]["wA"].astype(h.dtype))),
             p["tm"]["wB"].astype(h.dtype),
         )
-        w = jnp.exp(-jnp.exp(
-            (p["tm"]["w0"].astype(jnp.float32) + dw.astype(jnp.float32)).reshape(B, H, dh)
-        ))
+        # same per-step log-decay floor as the chunked prefill form, so a
+        # decode continuation stays consistent with chunk-prefilled state
+        w = jnp.exp(jnp.maximum(
+            -jnp.exp((p["tm"]["w0"].astype(jnp.float32)
+                      + dw.astype(jnp.float32)).reshape(B, H, dh)),
+            -_decay_clamp(cfg.rwkv_chunk)))
         S = cache["state"][i]  # (B,H,dh,dh)
         a = k[..., :, None] * v[..., None, :]
         u = p["tm"]["u"].astype(jnp.float32)
         y = jnp.einsum("bhi,bhij->bhj", r, S + u[None, :, :, None] * a)
-        S = w[..., :, None] * S + a
+        S = jnp.where(act[:, None, None, None], w[..., :, None] * S + a, S)
         new_cache["state"] = new_cache["state"].at[i].set(S)
-        new_cache["tm_x"] = new_cache["tm_x"].at[i].set(h.astype(cache["tm_x"].dtype))
+        new_cache["tm_x"] = new_cache["tm_x"].at[i].set(
+            jnp.where(act[:, None], h.astype(cache["tm_x"].dtype),
+                      cache["tm_x"][i]))
         y = _group_norm(y[:, :, None], p["tm"]["gn_w"], p["tm"]["gn_b"], cfg.norm_eps)[:, :, 0]
         y = y * g.astype(jnp.float32)
         x = x + jnp.einsum("bhk,hkd->bd", y.astype(x.dtype), p["tm"]["wo"].astype(x.dtype))
@@ -307,10 +342,12 @@ def decode_step(params, cfg: ModelConfig, cache, tokens):
         x = x + jax.nn.sigmoid(
             jnp.einsum("bd,de->be", xr2, p["cm"]["wr"].astype(h.dtype))
         ) * out
-        new_cache["cm_x"] = new_cache["cm_x"].at[i].set(h.astype(cache["cm_x"].dtype))
+        new_cache["cm_x"] = new_cache["cm_x"].at[i].set(
+            jnp.where(act[:, None], h.astype(cache["cm_x"].dtype),
+                      cache["cm_x"][i]))
     x = L.apply_norm(x[:, None], params["ln_f"], cfg)
     logits = L.unembed(x, params["embed"], cfg)[:, 0]
-    new_cache["lengths"] = cache["lengths"] + 1
+    new_cache["lengths"] = cache["lengths"] + act.astype(cache["lengths"].dtype)
     return logits, new_cache
 
 
@@ -341,3 +378,77 @@ def prefill(params, cfg: ModelConfig, batch, cache):
     logits = L.unembed(x[:, -1:], params["embed"], cfg)
     new_cache["lengths"] = jnp.full_like(cache["lengths"], S)
     return logits[:, 0], new_cache
+
+
+def layer_cache_kinds(cfg: ModelConfig):
+    """Per-layer serving-cache kinds (serve/cache protocol, DESIGN.md §12)."""
+    return ["wkv"] * cfg.num_layers
+
+
+def prefill_chunk(params, cfg: ModelConfig, cache, tokens, num_valid, *,
+                  all_logits=False, collect_kv=False):
+    """Chunked batched prefill: C prompt tokens per slot, ragged lengths.
+
+    The serving engine's prefill path for the recurrent family: one jitted
+    dispatch advances every prefilling slot's wkv state by up to C prompt
+    tokens through the chunk-parallel ``wkv_chunked`` (state carried in via
+    ``initial_state`` — the chunk_rwkv6 dual-mode design), instead of C
+    token-by-token decode replays. Ragged lanes (position >= num_valid)
+    contribute decay exp(0) = 1 and k = 0, so a lane's state past its length
+    — and every lane of a slot with num_valid == 0 — is preserved
+    bit-for-bit (explicit ``where`` guards on all writes).
+
+    Returns (logits, cache): logits at each slot's last valid position, or
+    (B, C, V) for every chunk position with ``all_logits``. ``collect_kv``
+    is a paged-cache feature (speculative verify) and raises here.
+    """
+    if collect_kv:
+        raise NotImplementedError(
+            "recurrent state has no K/V stream to collect; speculative "
+            "verify needs the ring-paged cache (DESIGN.md §12)")
+    B, C = tokens.shape
+    rc = cfg.rwkv_chunk
+    Cp = -(-C // rc) * rc  # wkv_chunked needs a whole number of chunks
+    if Cp != C:
+        tokens = jnp.pad(tokens, ((0, 0), (0, Cp - C)))
+    nv = num_valid.astype(jnp.int32)
+    tv = jnp.arange(Cp) < nv[:, None]  # (B, Cp) lane validity
+    last = jnp.clip(nv - 1, 0, Cp - 1)
+    gate = nv > 0
+    g2, g4 = gate[:, None], gate[:, None, None, None]
+    x = L.embed(tokens, params["embed"], cfg)
+    new_cache = dict(cache)
+    for i, p in enumerate(_layers_iter(params, cfg)):
+        h = L.apply_norm(x, p["ln1"], cfg)
+        # token shift crosses the chunk boundary through the carried tm_x
+        r, k, v, g, lw = _tm_inputs(h, p["tm"], cfg,
+                                    x_prev=cache["tm_x"][i])
+        m4 = tv[:, None, :, None]
+        lw = jnp.where(m4, lw, 0.0)
+        k = jnp.where(m4, k, 0.0)
+        v = jnp.where(m4, v, 0.0)
+        y, S_T = wkv_chunked(r, k, v, lw, p["tm"]["u"], rc,
+                             initial_state=cache["state"][i],
+                             return_state=True)
+        new_cache["state"] = new_cache["state"].at[i].set(
+            jnp.where(g4, S_T, cache["state"][i]))
+        h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+        new_cache["tm_x"] = new_cache["tm_x"].at[i].set(
+            jnp.where(g2, h_last.astype(cache["tm_x"].dtype),
+                      cache["tm_x"][i]))
+        y = _group_norm(y, p["tm"]["gn_w"], p["tm"]["gn_b"], cfg.norm_eps)
+        y = y * g.astype(jnp.float32)
+        x = x + jnp.einsum("bhtk,hkd->btd", y.astype(x.dtype),
+                           p["tm"]["wo"].astype(x.dtype))
+        h = L.apply_norm(x, p["ln2"], cfg)
+        x = x + channel_mix(h, p["cm"], cfg, x_prev=cache["cm_x"][i])
+        h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+        new_cache["cm_x"] = new_cache["cm_x"].at[i].set(
+            jnp.where(g2, h_last.astype(cache["cm_x"].dtype),
+                      cache["cm_x"][i]))
+    x = L.apply_norm(x, params["ln_f"], cfg)
+    new_cache["lengths"] = cache["lengths"] + nv
+    if all_logits:
+        return L.unembed(x[:, :C], params["embed"], cfg), new_cache
+    xl = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    return L.unembed(xl, params["embed"], cfg)[:, 0], new_cache

@@ -211,6 +211,16 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
     return c
 
 
+def layer_cache_kinds(cfg: ModelConfig):
+    """Per-layer serving-cache kinds (serve/cache protocol, DESIGN.md §12).
+
+    Every transformer layer holds KV state: ring-paged with pyramid block
+    sums under the MRA attention kinds, plain dense KV otherwise.
+    """
+    kind = "paged_kv" if cfg.attention.kind in ("mra2", "mra2_s") else "kv"
+    return [kind] * cfg.num_layers
+
+
 def prefill(params, cfg: ModelConfig, batch, cache):
     """Run the full prompt, fill the cache, return (last_logits, cache)."""
     x = _input_embed(params, cfg, batch)

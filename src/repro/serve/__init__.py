@@ -1,17 +1,23 @@
-from .engine import Engine
-from .kv_cache import RingPagedKVCache
+from .cache import (CacheBackend, HybridWindowCache, RecurrentStateCache,
+                    RingPagedKVCache, make_cache)
+from .engine import Engine, EngineConfig
 from .sampling import SamplingParams, sample, sample_batch
 from .scheduler import Request, Scheduler, SlotState
 from .speculative import SpecDecoder
 
 __all__ = [
+    "CacheBackend",
     "Engine",
+    "EngineConfig",
+    "HybridWindowCache",
+    "RecurrentStateCache",
     "Request",
     "RingPagedKVCache",
     "SamplingParams",
     "Scheduler",
     "SlotState",
     "SpecDecoder",
+    "make_cache",
     "sample",
     "sample_batch",
 ]

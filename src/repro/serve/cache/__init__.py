@@ -1,0 +1,43 @@
+"""serve/cache: per-layer cache protocol + backends (DESIGN.md §12).
+
+``make_cache`` is the engine's single entry point: it reads the model's
+per-layer cache kinds from the registry contract (``layer_cache_kinds``)
+and picks the backend whose state covers them. The split keeps the engine
+architecture-agnostic — serve/engine.py never mentions pyramids, wkv
+states, or ring windows.
+"""
+from __future__ import annotations
+
+from .paged import RingPagedKVCache, quantize_kv
+from .protocol import CacheBackend, StateCache
+from .recurrent import RecurrentStateCache
+from .window import HybridWindowCache
+
+__all__ = [
+    "CacheBackend", "HybridWindowCache", "RecurrentStateCache",
+    "RingPagedKVCache", "StateCache", "make_cache", "quantize_kv",
+]
+
+# layer kind -> backend family; every kind a model declares must land in
+# exactly one backend (hybrids are legal within one backend's row)
+_PAGED_KINDS = frozenset({"paged_kv", "kv"})
+_RECURRENT_KINDS = frozenset({"wkv"})
+_WINDOW_KINDS = frozenset({"window", "rglru"})
+
+
+def make_cache(cfg, model, slots: int, max_len: int, mesh=None) -> CacheBackend:
+    """Build the cache backend serving ``model``'s per-layer kinds."""
+    kinds = tuple(model.layer_cache_kinds(cfg))
+    ks = set(kinds)
+    if ks <= _PAGED_KINDS:
+        cache = RingPagedKVCache(cfg, model, slots, max_len, mesh=mesh)
+    elif ks <= _RECURRENT_KINDS:
+        cache = RecurrentStateCache(cfg, model, slots, max_len, mesh=mesh)
+    elif ks <= _WINDOW_KINDS:
+        cache = HybridWindowCache(cfg, model, slots, max_len, mesh=mesh)
+    else:
+        raise ValueError(
+            f"no cache backend serves layer cache kinds {sorted(ks)} "
+            f"(family {cfg.family!r})")
+    cache.kinds = kinds
+    return cache

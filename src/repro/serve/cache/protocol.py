@@ -1,0 +1,136 @@
+"""Per-layer cache protocol: the engine-facing contract every backend meets.
+
+The serving engine (serve/engine.py, DESIGN.md §9/§12) is architecture-
+agnostic: it plans chunks and decode waves, and the *model* functions
+(``prefill_chunk`` / ``decode_step`` resolved through models/registry.py)
+own the cache tree's layout and numerics. What the engine needs from the
+cache object is only lifecycle + introspection, and that is this protocol:
+
+  tree           the device pytree handed to every jitted model call
+  specs          the ParamSpec tree that declared it (mesh placement, dtypes)
+  capacity       per-slot token budget for admission control, or ``None``
+                 when the state is O(1)/O(window) per slot and the scheduler
+                 must not reject on prompt length (recurrent backends)
+  chunk_cap      optional ceiling on the engine's prefill chunk size (a
+                 sliding-window ring can absorb at most W tokens per
+                 dispatch without overwriting keys its own queries need)
+  paged          ring-paged MRA semantics (page table + pyramid); drives the
+                 scheduler's "generation may exceed capacity" rule
+  supports_spec  whether spec_snapshot/spec_rewind exist — speculative
+                 decoding drafts through the MRA pyramid and rewinds the
+                 ring, so only the paged backend supports it
+  reset_slots    bit-exact per-slot reset on (re)admission
+  lengths        (slots,) host view of per-slot stream lengths
+
+Which backend serves a model is decided per *layer* from the model's
+``layer_cache_kinds(cfg)`` (see ``make_cache`` in __init__.py): every layer
+kind maps to cache state the backend knows how to reset, and hybrid models
+(recurrentgemma's local/rglru pattern) get one backend holding both kinds'
+state in a single tree — per-layer selection, single lifecycle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import init_params, param_shardings
+
+
+class CacheBackend:
+    """Base class carrying the protocol defaults (see module docstring)."""
+
+    paged = False
+    supports_spec = False
+    chunk_cap: int | None = None
+    capacity: int | None = None
+    kinds: tuple = ()
+
+    def reset_slots(self, mask: np.ndarray) -> None:
+        raise NotImplementedError
+
+    @property
+    def lengths(self) -> np.ndarray:
+        return np.asarray(self.tree["lengths"])
+
+    # speculative decoding is a paged-backend feature (DESIGN.md §10/§12)
+    def spec_snapshot(self, window: int):
+        raise NotImplementedError(
+            "speculative rounds need the ring-paged MRA cache "
+            "(pyramid pages are the draft model)")
+
+    def spec_rewind(self, snap, target_lengths, gate, chunk_kv=None):
+        raise NotImplementedError(
+            "speculative rounds need the ring-paged MRA cache "
+            "(pyramid pages are the draft model)")
+
+
+def fill_value(spec) -> float:
+    """The constant a ``zeros``/``ones``/``fill`` ParamSpec initializes to.
+
+    State backends reset a slot by rewriting its rows with this value, so
+    reset ≡ fresh init bit-for-bit for every leaf (e.g. recurrentgemma's
+    ``kv_pos`` ring positions fill with -1 = empty, not 0).
+    """
+    if spec.init == "zeros":
+        return 0.0
+    if spec.init == "ones":
+        return 1.0
+    if spec.init == "fill":
+        return spec.scale
+    raise ValueError(
+        f"cache spec init {spec.init!r} has no reset constant; cache state "
+        "must be declared zeros/ones/fill")
+
+
+@functools.lru_cache(maxsize=None)
+def make_state_reset(items: tuple):
+    """Jitted bit-exact slot reset for a state-cache tree.
+
+    ``items`` is a tuple of (key, fill) pairs. Layout convention shared by
+    the recurrent/window backends: ``lengths`` is (slots,); every other leaf
+    is (layers, slots, ...) with the slot axis second.
+    """
+
+    def reset(cache, mask):
+        c = dict(cache)
+        for key, fill in items:
+            a = cache[key]
+            if key == "lengths":
+                m = mask
+            else:
+                m = mask.reshape((1, -1) + (1,) * (a.ndim - 2))
+            c[key] = jnp.where(m, jnp.asarray(fill, a.dtype), a)
+        return c
+
+    return jax.jit(reset)
+
+
+class StateCache(CacheBackend):
+    """Shared lifecycle for fixed-size per-slot state trees (no paging).
+
+    The tree is exactly ``model.cache_specs(cfg, slots, max_len)`` — the
+    model owns the layout; this class owns init/placement/reset. Per-slot
+    state is O(1) (recurrent) or O(window) (sliding-window ring), so there
+    is no admission capacity: ``capacity`` stays None and the scheduler
+    accepts any prompt/generation length.
+    """
+
+    capacity = None
+
+    def __init__(self, cfg, model, slots: int, max_len: int, mesh=None):
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.specs = model.cache_specs(cfg, slots, max_len)
+        self.tree = init_params(self.specs, jax.random.PRNGKey(0))
+        if mesh is not None:
+            self.tree = jax.tree.map(
+                jax.device_put, self.tree, param_shardings(self.specs, mesh))
+        self._reset = make_state_reset(
+            tuple(sorted((k, fill_value(s)) for k, s in self.specs.items())))
+
+    def reset_slots(self, mask: np.ndarray) -> None:
+        self.tree = self._reset(self.tree, jnp.asarray(mask))

@@ -1,0 +1,26 @@
+"""Recurrent-state cache backend (RWKV-6 family, layer kind ``wkv``).
+
+Per slot the state is O(1) in the stream length: one (H, dh, dh) wkv matrix
+plus the token-shift carries (the previous token's normed activations for
+the time-mix and channel-mix branches) per layer, and a length counter. The
+tree layout is ``rwkv6.cache_specs``; chunked prefill advances it through
+the generalized ``wkv_chunked`` (the chunk_rwkv6 dual-mode design:
+chunk-parallel for prefill throughput, fused recurrence for decode latency)
+and ``decode_step`` advances it one token at a time under an ``active``
+mask, so ragged continuous batching preserves frozen slots bit-for-bit.
+
+No admission capacity (``capacity = None``): prompts and generations of any
+length fit in constant memory, which is the whole point of serving the
+attention-free families through the same engine. Speculative decoding is
+unsupported — there is no pyramid to draft from and no ring to rewind
+(DESIGN.md §12).
+"""
+from __future__ import annotations
+
+from .protocol import StateCache
+
+__all__ = ["RecurrentStateCache"]
+
+
+class RecurrentStateCache(StateCache):
+    """Fixed-size wkv state per slot; lifecycle shared with StateCache."""

@@ -1,0 +1,31 @@
+"""Hybrid sliding-window + recurrent cache backend (recurrentgemma family).
+
+One tree, two per-layer kinds (DESIGN.md §12): the ``window`` layers hold a
+W-entry K/V ring buffer keyed by absolute positions (``kv_pos``, -1 =
+empty; W = min(cfg.local_window, max_len)), and the ``rglru`` layers hold
+the RG-LRU hidden state plus the depthwise-conv tail. The layout is
+``recurrentgemma.cache_specs`` — per-layer selection happens inside the
+model's ``prefill_chunk``/``decode_step`` over its block pattern, so hybrid
+local/global models fall out of the same engine mechanism with no special
+cases in serve/engine.py.
+
+Like the pure-recurrent backend the per-slot state is bounded (O(window)),
+so there is no admission capacity; unlike the paged backend the ring keyed
+by position needs ``chunk_cap = W``: a prefill chunk larger than the window
+would scatter two tokens into the same ring entry in one dispatch (and the
+chunk's own queries would lose keys they still attend). The engine clamps
+its chunk size accordingly.
+"""
+from __future__ import annotations
+
+from .protocol import StateCache
+
+__all__ = ["HybridWindowCache"]
+
+
+class HybridWindowCache(StateCache):
+    """Window-ring + RG-LRU state per slot; chunk size capped at the window."""
+
+    def __init__(self, cfg, model, slots: int, max_len: int, mesh=None):
+        super().__init__(cfg, model, slots, max_len, mesh=mesh)
+        self.chunk_cap = min(cfg.local_window, max_len)

@@ -1,15 +1,22 @@
 """Serving engine: ragged continuous batching with chunked prefill + sampling.
 
-The production-serving loop (DESIGN.md §9). Per engine iteration:
+The production-serving loop (DESIGN.md §9), lifted above the cache type by
+the per-layer cache protocol (serve/cache/, DESIGN.md §12): the engine
+resolves every model through one uniform registry contract —
+``cache_specs / layer_cache_kinds / prefill_chunk / decode_step`` — so the
+paged-pyramid transformer families, the RWKV-6 recurrent family, and the
+hybrid local/rglru recurrentgemma family all serve through the same loop.
+Per engine iteration:
 
   1. admission — pending requests bind to FREE slots; the slot's cache rows
-     are reset bit-exactly (kv_cache.RingPagedKVCache).
+     are reset bit-exactly (cache.CacheBackend.reset_slots).
   2. chunked prefill — ONE jitted ``prefill_chunk`` dispatch advances every
      PREFILL slot by up to ``chunk`` prompt tokens (ragged ``num_valid``),
-     writing KV + pyramid block sums directly. O(ceil(P/chunk)) dispatches
-     per prompt instead of the O(P) per-token decode replays of the old
-     engine. Slots whose prompt completes sample their first token from the
-     chunk's last-position logits.
+     writing KV + pyramid block sums (paged), wkv states (recurrent), or
+     window rings + RG-LRU states (hybrid) directly. O(ceil(P/chunk))
+     dispatches per prompt instead of the O(P) per-token decode replays of
+     the old engine. Slots whose prompt completes sample their first token
+     from the chunk's last-position logits.
   3. decode — ONE jitted ``decode_step`` + fused ``sample_batch`` dispatch
      advances every DECODE slot (active-masked: other slots' state is
      untouched bit-for-bit), each at its own ragged length. With
@@ -17,20 +24,23 @@ The production-serving loop (DESIGN.md §9). Per engine iteration:
      round (serve/speculative.py, DESIGN.md §10): K coarse-pyramid draft
      steps + one chunked full-MRA verify dispatch emit up to K+1 tokens per
      slot, with rejection sampling keeping output distributions — and greedy
-     outputs bit — identical to this non-speculative path.
+     outputs bit — identical to this non-speculative path. Speculation needs
+     the paged backend (pyramid draft + ring rewind).
 
 Slots never wait for each other: a slot can decode while its neighbor is
 mid-prefill, and finished slots readmit immediately. With ``mesh`` set the
-engine serves tensor-parallel (params/KV/pyramid placed by ParamSpec axes;
+engine serves tensor-parallel (params/cache placed by ParamSpec axes;
 attention through shard_map when ``cfg.attn_shard``). ``Engine.stats``
 counts jitted dispatches and per-step latencies for benchmarks/serve_bench.
 """
 from __future__ import annotations
 
 import collections
+import dataclasses
 import functools
 import time
-from typing import List
+import warnings
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,11 +50,44 @@ from repro.configs.base import ModelConfig
 from repro.distributed import mesh_utils
 from repro.models import get_model
 
-from .kv_cache import RingPagedKVCache
+from .cache import make_cache
 from .sampling import SamplingParams, greedy_batch, sample_batch
 from .scheduler import Request, Scheduler
 
-__all__ = ["Engine", "Request", "SamplingParams"]
+__all__ = ["Engine", "EngineConfig", "Request", "SamplingParams"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine construction knobs (the old ``Engine(**kwargs)`` sprawl).
+
+    slots: concurrent sequences served.
+    max_len: per-slot cache window. For MRA attention this is the ring
+      capacity (must divide into pyramid blocks): prompts must fit, but
+      generation beyond it evicts the oldest background pages. For dense
+      attention kinds it is a hard prompt+generation cap. The recurrent /
+      sliding-window backends hold O(1)/O(window) state per slot, so for
+      them it only sizes the window ring (no admission cap).
+    chunk: prefill chunk size (tokens per slot per prefill dispatch);
+      clamped to ``max_len`` and to the backend's ``chunk_cap`` (a window
+      ring absorbs at most W tokens per dispatch).
+    spec_k: speculative draft length (0 = plain decode); requires an MRA
+      attention kind and the paged cache backend, and ``spec_k + 1 <=
+      max_len``.
+    mesh: jax device mesh for tensor-parallel serving (None = single device).
+    default_sampling: sampler settings applied to requests submitted with
+      ``sampling=None`` (None = greedy).
+    """
+
+    slots: int = 4
+    max_len: int = 512
+    chunk: int = 32
+    spec_k: int = 0
+    mesh: Optional[object] = None
+    default_sampling: Optional[SamplingParams] = None
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
 
 
 @functools.lru_cache(maxsize=None)
@@ -55,10 +98,14 @@ def _make_engine_fns(cfg: ModelConfig):
     the same config shares compiled executables.
     """
     model = get_model(cfg)
-    if not hasattr(model, "prefill_chunk"):
+    missing = [name for name in
+               ("cache_specs", "layer_cache_kinds", "prefill_chunk",
+                "decode_step")
+               if not hasattr(model, name)]
+    if missing:
         raise NotImplementedError(
-            f"family {cfg.family!r} does not expose prefill_chunk; the "
-            "continuous-batching engine serves the transformer families")
+            f"family {cfg.family!r} does not implement the serving contract "
+            f"(missing {missing}; see models/registry.py)")
 
     def prefill_chunk(params, cache, tokens, num_valid):
         return model.prefill_chunk(params, cfg, cache, tokens, num_valid)
@@ -90,52 +137,67 @@ def _make_engine_fns(cfg: ModelConfig):
 
 
 class Engine:
-    """Batched request server over ``slots`` concurrent sequences.
+    """Batched request server over ``config.slots`` concurrent sequences.
 
-    max_len: per-slot cache window. For MRA attention this is the ring
-      capacity (must divide into pyramid blocks): prompts must fit, but
-      generation beyond it evicts the oldest background pages instead of
-      failing. For dense attention kinds it is a hard prompt+generation cap.
-    chunk: prefill chunk size (tokens per slot per prefill dispatch).
-    spec_k: speculative draft length (0 = plain decode). Each decode wave
-      drafts ``spec_k`` tokens per slot with coarse-only MRA attention and
-      verifies them in one chunked dispatch; requires an MRA attention kind
-      (the pyramid is the draft model) and ``spec_k + 1 <= max_len``.
+    Construction: ``Engine(cfg, params, EngineConfig(...))``. The pre-
+    EngineConfig keyword signature (``Engine(cfg, params, slots=...,
+    max_len=..., chunk=..., spec_k=..., mesh=...)``) survives as a
+    deprecated shim for one release and warns on use.
 
-    Serves the transformer token-LM families (dense/moe): chunked prefill
-    requires ``prefill_chunk`` and slot isolation requires active-masked
-    ``decode_step``, neither of which the recurrent families (rwkv6,
-    recurrentgemma) implement — the old engine's decode-replay prefill
-    "supported" them only by advancing every slot's recurrent state at once
-    (the cross-slot corruption this rewrite removes). Unsupported families
-    raise NotImplementedError at construction.
+    Serves every registered family through the uniform contract: the cache
+    backend is selected from the model's per-layer cache kinds
+    (serve/cache.make_cache), chunked prefill goes through the family's
+    ``prefill_chunk`` (paged KV scatter, chunked wkv, or chunked
+    window/RG-LRU), and decode through its active-masked ``decode_step``.
     """
 
-    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 512, chunk: int = 32, spec_k: int = 0,
-                 mesh=None):
+    def __init__(self, cfg: ModelConfig, params,
+                 config: Optional[EngineConfig] = None, **kwargs):
+        if kwargs:
+            known = {f.name for f in dataclasses.fields(EngineConfig)}
+            unknown = set(kwargs) - known
+            if unknown:
+                raise TypeError(
+                    f"Engine() got unexpected keyword arguments {sorted(unknown)}")
+            warnings.warn(
+                "Engine(cfg, params, slots=..., max_len=..., ...) is "
+                "deprecated; pass an EngineConfig instead",
+                DeprecationWarning, stacklevel=2)
+            config = dataclasses.replace(config or EngineConfig(), **kwargs)
+        elif config is None:
+            config = EngineConfig()
+        self.config = config
         self.cfg = cfg
         self.model = get_model(cfg)
-        self.slots = slots
-        self.max_len = max_len
-        self.chunk = min(chunk, max_len)
-        self.spec_k = spec_k
-        self.mesh = mesh
-        self.kv = RingPagedKVCache(cfg, self.model, slots, max_len, mesh=mesh)
+        self.slots = config.slots
+        self.max_len = config.max_len
+        self.spec_k = config.spec_k
+        self.mesh = config.mesh
+        self.kv = make_cache(cfg, self.model, self.slots, self.max_len,
+                             mesh=self.mesh)
+        self.chunk = min(config.chunk, self.max_len)
+        if self.kv.chunk_cap is not None:
+            self.chunk = min(self.chunk, self.kv.chunk_cap)
         self._spec = None
-        if spec_k:
+        if self.spec_k:
             from .speculative import SpecDecoder
 
-            if spec_k + 1 > max_len:
+            if self.spec_k + 1 > self.max_len:
                 raise ValueError(
-                    f"spec_k {spec_k} + 1 exceeds the cache window {max_len}")
-            self._spec = SpecDecoder(cfg, spec_k)
-        if mesh is not None:
+                    f"spec_k {self.spec_k} + 1 exceeds the cache window "
+                    f"{self.max_len}")
+            self._spec = SpecDecoder(cfg, self.spec_k)
+            if not self.kv.supports_spec:
+                raise NotImplementedError(
+                    "speculative decoding needs the ring-paged MRA cache "
+                    f"backend; {type(self.kv).__name__} has no "
+                    "snapshot/rewind (DESIGN.md §12)")
+        if self.mesh is not None:
             from repro.models.params import param_shardings
 
             params = jax.tree.map(
                 jax.device_put, params,
-                param_shardings(self.model.param_specs(cfg), mesh))
+                param_shardings(self.model.param_specs(cfg), self.mesh))
         self.params = params
         self._prefill, self._decode, self._sample = _make_engine_fns(cfg)
         self.reset_stats()
@@ -164,7 +226,8 @@ class Engine:
         """Serve ``requests`` to completion; returns them with ``out`` filled
         (completion order, which may differ from submission order)."""
         sched = Scheduler(self.slots, self.kv.capacity, self.chunk,
-                          ring=self.kv.paged)
+                          ring=self.kv.paged,
+                          default_sampling=self.config.default_sampling)
         for r in requests:
             sched.submit(r)
         with mesh_utils.use_mesh(self.mesh):

@@ -1,249 +1,13 @@
-"""Ring-paged KV cache manager for the serving engine.
+"""Compatibility shim — the cache moved to serve/cache/ (protocol + backends).
 
-The cache is block-granular: physical pages are ``cfg.attention.block_size``
-tokens, i.e. exactly the MRA pyramid's blocks — the pyramid block sums ARE
-the page table payload (one (B, nb) int32 table of logical block owners,
-shared by every layer, plus per-layer k/v/pyr tensors declared by
-``model.cache_specs``). Position ``p`` of a slot lives at physical index
-``p % capacity``; once a slot's stream exceeds the capacity, appending
-recycles the oldest background page (ring eviction) while
-``mra2_decode_attention`` keeps selecting its top-m blocks among the live
-pages. Non-MRA attention kinds get the same storage without a page table
-(dense, hard capacity).
-
-This module owns the engine-side lifecycle: building/placing the cache tree,
-bit-exact per-slot reset on admission, and occupancy introspection. The
-ring/page *math* lives with the attention code (core/mra_decode.py) so the
-model layer never imports serve/.
-
-Speculative decoding (DESIGN.md §10) adds the *bounded ring rewind*: before
-a draft round, ``spec_snapshot`` captures exactly the state a W-token write
-window can destroy — the W physical K/V rows starting at each slot's length
-(a ring page being recycled overwrites the evicted block's bytes with the
-new block's), plus references to the (immutable, small) lengths / page table
-/ pyramid arrays. ``spec_rewind`` then restores any per-slot target length
-in [L0, L0+W]: lengths and window bytes at positions >= target come back
-from the snapshot, page ownership created by writes at positions >= target
-is undone, and the pyramid is rebuilt as snapshot + the accepted prefix's
-exact fp32 contributions (replayed from the verify chunk's K/V, not from
-possibly-quantized cache bytes). Cost is O(W) per slot per round,
-independent of the stream length — speculation never copies the cache.
+The ring-paged MRA cache now lives in serve/cache/paged.py as one backend of
+the per-layer cache protocol (serve/cache/protocol.py, DESIGN.md §12),
+alongside the recurrent-state and hybrid sliding-window backends. Import
+from ``repro.serve.cache`` going forward; this module re-exports the old
+names so existing callers keep working.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import ModelConfig
-from repro.core.mra_decode import quantize_kv  # re-export: page quantization
-from repro.models.params import init_params, param_shardings
+from .cache.paged import RingPagedKVCache, quantize_kv
 
 __all__ = ["RingPagedKVCache", "quantize_kv"]
-
-
-@functools.lru_cache(maxsize=None)
-def _make_reset(paged: bool):
-    """Jitted bit-exact slot reset: zero the rows selected by ``mask``.
-
-    Only the *validity* state is cleared (lengths, page table, pyramid block
-    sums); stale K/V bytes are unreachable once no live page maps to them, so
-    they are left in place — same trick as the dense path's length masking.
-    """
-
-    def reset(cache, mask):
-        c = dict(cache)
-        c["lengths"] = jnp.where(mask, 0, cache["lengths"])
-        if paged:
-            c["page_blocks"] = jnp.where(
-                mask[:, None], jnp.int32(-1), cache["page_blocks"])
-        if "pyr_k" in c:
-            m4 = mask[:, None, None, None]
-            c["pyr_k"] = [jnp.where(m4, 0.0, a) for a in cache["pyr_k"]]
-            c["pyr_v"] = [jnp.where(m4, 0.0, a) for a in cache["pyr_v"]]
-        return c
-
-    return jax.jit(reset)
-
-
-def _window_indices(lengths, W: int, S: int):
-    """((B, W) global positions, (B, W) physical ring indices, (B, W) b_idx)."""
-    B = lengths.shape[0]
-    pos = lengths[:, None] + jnp.arange(W, dtype=lengths.dtype)  # (B, W)
-    b2 = jnp.broadcast_to(jnp.arange(B)[:, None], (B, W))
-    return pos, pos % S, b2
-
-
-@functools.lru_cache(maxsize=None)
-def _make_spec_fns(W: int, block: int, quant: bool):
-    """Jitted (window gather, ring rewind) for a W-token speculative window.
-
-    Cached on the static window shape; the cache tree itself rides through
-    as a pytree argument so every Engine/config shares compiled code per W.
-    """
-
-    def gather(cache):
-        S = cache["k"][0].shape[2]
-        _, widx, b2 = _window_indices(cache["lengths"], W, S)
-        win = {
-            "k": [k[b2, :, widx] for k in cache["k"]],  # (B, W, Hkv, D)
-            "v": [v[b2, :, widx] for v in cache["v"]],
-        }
-        if quant:
-            win["k_scale"] = [s[b2, :, widx] for s in cache["k_scale"]]
-            win["v_scale"] = [s[b2, :, widx] for s in cache["v_scale"]]
-        return win
-
-    def rewind(cache, snap, target_lengths, gate, chunk_kv):
-        """Restore every ``gate`` slot to ``target_lengths`` in [L0, L0+W].
-
-        Slots with ``gate`` False — or already at their target — keep every
-        byte of their state untouched. ``chunk_kv`` is (chunk_k, chunk_v)
-        from the verify dispatch ((L, B, Hkv, C, D) fp32, C <= W) whose
-        position-p entries are replayed into the pyramid for L0 <= p < Lt;
-        None means no replay (the pure post-draft rewind, Lt == L0).
-        """
-        L0 = snap["lengths"]
-        Lt = target_lengths.astype(L0.dtype)
-        cur = cache["lengths"]
-        need = gate & (Lt < cur)
-        c = dict(cache)
-        c["lengths"] = jnp.where(need, Lt, cur)
-        S = cache["k"][0].shape[2]
-        pos, widx, b2 = _window_indices(L0, W, S)
-        restore = need[:, None] & (pos >= Lt[:, None])  # (B, W)
-        r4 = restore[:, :, None, None]
-        r3 = restore[:, :, None]
-
-        def put(arr, saved, m):
-            old = arr[b2, :, widx]
-            return arr.at[b2, :, widx].set(jnp.where(m, saved, old))
-
-        c["k"] = [put(a, s, r4) for a, s in zip(cache["k"], snap["win"]["k"])]
-        c["v"] = [put(a, s, r4) for a, s in zip(cache["v"], snap["win"]["v"])]
-        if quant:
-            c["k_scale"] = [put(a, s, r3) for a, s in
-                            zip(cache["k_scale"], snap["win"]["k_scale"])]
-            c["v_scale"] = [put(a, s, r3) for a, s in
-                            zip(cache["v_scale"], snap["win"]["v_scale"])]
-        # page ownership created by a write at position >= Lt is undone; an
-        # owner whose block starts below Lt legitimately exists at Lt (it is
-        # at worst partial), including blocks first opened by kept writes.
-        pb = cache["page_blocks"]
-        undo = need[:, None] & (pb * block >= Lt[:, None])
-        c["page_blocks"] = jnp.where(undo, snap["page_blocks"], pb)
-        # pyramid: snapshot base + the kept window positions' exact fp32
-        # contributions (same one-hot einsum as prefill_chunk's add)
-        npages = cache["pyr_k"][0].shape[2]
-        page = (pos // block) % npages
-        keep_tok = need[:, None] & (pos < Lt[:, None])  # (B, W)
-        ind_b = (page[:, :, None] == jnp.arange(npages)) & keep_tok[:, :, None]
-        ind = ind_b.astype(jnp.float32)
-        # a page recycled by a *kept* write starts its new block from zero —
-        # the evicted block's snapshot sums are gone for good (same rule as
-        # prefill_chunk's fresh mask, restricted to the accepted prefix)
-        fresh = jnp.any(ind_b & ((pos % block) == 0)[:, :, None], axis=1)
-        f4 = fresh[:, None, :, None]
-        n4 = need[:, None, None, None]
-        pyr_k, pyr_v = [], []
-        for li in range(len(cache["pyr_k"])):
-            base_k = jnp.where(f4, 0.0, snap["pyr_k"][li])
-            base_v = jnp.where(f4, 0.0, snap["pyr_v"][li])
-            if chunk_kv is not None:
-                ck, cv = chunk_kv[0][li], chunk_kv[1][li]  # (B, Hkv, C, D)
-                C = ck.shape[2]
-                base_k = base_k + jnp.einsum("bcy,bhcd->bhyd", ind[:, :C], ck)
-                base_v = base_v + jnp.einsum("bcy,bhcd->bhyd", ind[:, :C], cv)
-            pyr_k.append(jnp.where(n4, base_k, cache["pyr_k"][li]))
-            pyr_v.append(jnp.where(n4, base_v, cache["pyr_v"][li]))
-        c["pyr_k"], c["pyr_v"] = pyr_k, pyr_v
-        return c
-
-    return jax.jit(gather), jax.jit(rewind)
-
-
-class RingPagedKVCache:
-    """Engine-side decode state: KV pages + pyramid + page table + lengths.
-
-    With ``mesh`` set, every tensor is placed by its ParamSpec logical axes
-    (slots over the data axes, kv-heads over the model axis) so the decode
-    and chunked-prefill steps run tensor-parallel (DESIGN.md §8/§9).
-    """
-
-    def __init__(self, cfg: ModelConfig, model, slots: int, max_len: int,
-                 mesh=None):
-        if cfg.attention.kind in ("mra2", "mra2_s"):
-            if max_len % cfg.attention.block_size != 0:
-                raise ValueError(
-                    f"max_len {max_len} must be a multiple of the MRA block "
-                    f"size {cfg.attention.block_size} (pages are blocks)")
-        self.cfg = cfg
-        self.slots = slots
-        self.capacity = max_len
-        self.specs = model.cache_specs(cfg, slots, max_len)
-        self.paged = "page_blocks" in self.specs
-        self.block = cfg.attention.block_size if self.paged else None
-        self.pages = max_len // cfg.attention.block_size if self.paged else None
-        self.quantized = "k_scale" in self.specs
-        self.tree = init_params(self.specs, jax.random.PRNGKey(0))
-        if mesh is not None:
-            self.tree = jax.tree.map(
-                jax.device_put, self.tree, param_shardings(self.specs, mesh))
-        self._reset = _make_reset(self.paged)
-
-    def reset_slots(self, mask: np.ndarray):
-        """Clear the slots selected by ``mask`` (B,) bool for re-admission."""
-        self.tree = self._reset(self.tree, jnp.asarray(mask))
-
-    # ---- speculative decoding: bounded ring snapshot / rewind -------------- #
-    def spec_snapshot(self, window: int):
-        """Capture the state a ``window``-token speculative round can destroy.
-
-        O(window) per slot: the W physical K/V rows ahead of each slot's
-        length are gathered; lengths, the page table, and the pyramid sums
-        are retained by reference (jax arrays are immutable, and they are
-        small — the big KV tensors are exactly what is NOT copied).
-        """
-        if not self.paged:
-            raise NotImplementedError(
-                "speculative rounds need the ring-paged MRA cache "
-                "(pyramid pages are the draft model)")
-        gather, _ = _make_spec_fns(window, self.block, self.quantized)
-        t = self.tree
-        return {
-            "lengths": t["lengths"],
-            "page_blocks": t["page_blocks"],
-            "pyr_k": list(t["pyr_k"]),
-            "pyr_v": list(t["pyr_v"]),
-            "win": gather(t),
-            "window": window,
-        }
-
-    def spec_rewind(self, snap, target_lengths, gate, chunk_kv=None):
-        """Rewind ``gate`` slots to ``target_lengths`` (see _make_spec_fns)."""
-        _, rewind = _make_spec_fns(snap["window"], self.block, self.quantized)
-        self.tree = rewind(self.tree, {k: v for k, v in snap.items()
-                                       if k != "window"},
-                           target_lengths, gate, chunk_kv)
-
-    @property
-    def lengths(self) -> np.ndarray:
-        return np.asarray(self.tree["lengths"])
-
-    def live_pages(self) -> Optional[np.ndarray]:
-        """(B,) live (non-evicted) page count per slot; None when dense."""
-        if not self.paged:
-            return None
-        return np.asarray((np.asarray(self.tree["page_blocks"]) >= 0).sum(-1))
-
-    def window_start(self) -> np.ndarray:
-        """(B,) oldest position still attendable (0 until eviction kicks in)."""
-        if not self.paged:
-            return np.zeros((self.slots,), np.int64)
-        pb = np.asarray(self.tree["page_blocks"]).astype(np.int64)
-        oldest = np.where(pb >= 0, pb, np.iinfo(np.int64).max).min(-1)
-        oldest = np.where((pb >= 0).any(-1), oldest, 0)
-        return oldest * self.block

@@ -1,9 +1,12 @@
 """Token sampling for the serving engine: greedy / temperature / top-k / top-p.
 
-Per-request parameters travel as ``SamplingParams`` on the ``Request``; the
-engine materializes them as per-slot arrays so one jitted ``sample_batch``
-serves every slot regardless of its sampler settings (greedy is
-``temperature == 0``).
+Per-request parameters travel as ``SamplingParams`` on the ``Request``
+(``sampling=None`` resolves to ``EngineConfig.default_sampling`` at submit,
+greedy when that is unset too); the engine materializes them as per-slot
+arrays so one jitted ``sample_batch`` serves every slot regardless of its
+sampler settings (greedy is ``temperature == 0``). Sampling never touches
+the cache, so the contract below holds identically for every cache backend
+(paged KV, recurrent state, hybrid window — DESIGN.md §12).
 
 Determinism contract (pinned by tests/test_engine.py): the PRNG key for a
 request's ``i``-th sampled token is ``fold_in(PRNGKey(seed), i)`` — a pure

@@ -8,9 +8,9 @@ with *ragged* per-slot progress: slots prefill different prompts in shared
 chunked dispatches, decode at different sequence lengths in shared decode
 dispatches, and finish/readmit independently — no "one wave at a time"
 alignment. The scheduler only plans (which tokens go into the next prefill
-chunk, which slots decode); all device state lives in the engine's
-RingPagedKVCache and all numerics in the jitted model functions, so planning
-order can never change a request's tokens (pinned by tests/test_engine.py).
+chunk, which slots decode); all device state lives in the engine's cache
+backend (serve/cache/) and all numerics in the jitted model functions, so
+planning order can never change a request's tokens (tests/test_engine.py).
 """
 from __future__ import annotations
 
@@ -30,14 +30,16 @@ class Request:
 
     prompt: (S,) int array of prompt token ids (S may be 0).
     max_new_tokens: number of tokens to sample.
-    sampling: per-request sampler settings (greedy by default).
+    sampling: per-request sampler settings; None = the engine's
+      ``EngineConfig.default_sampling`` (greedy when that is unset too),
+      resolved at submit.
     out: filled by the engine — (max_new_tokens,) int32 sampled tokens
       (empty for degenerate requests: empty prompt or max_new_tokens <= 0).
     """
 
     prompt: np.ndarray
     max_new_tokens: int = 16
-    sampling: SamplingParams = SamplingParams()
+    sampling: Optional[SamplingParams] = None
     out: Optional[np.ndarray] = None
     # filled by the engine when serving speculatively (spec_k > 0): drafted
     # tokens of this request that verification accepted (acceptance rate =
@@ -64,19 +66,23 @@ class Slot:
 class Scheduler:
     """Admission queue + slot state machines for the serving engine.
 
-    capacity: cache window per slot (tokens). Prompts longer than the
-      capacity are rejected at submit. When ``ring`` is False (dense cache:
-      non-MRA attention kinds) prompt + max_new_tokens must also fit — a
-      ring cache instead evicts its oldest background pages, so generation
-      length is unbounded.
+    capacity: cache window per slot (tokens), or None when the backend
+      holds O(1)/O(window) state per slot (recurrent families) and any
+      prompt/generation length is admissible. With a capacity, prompts
+      longer than it are rejected at submit; when ``ring`` is False (dense
+      cache: non-MRA attention kinds) prompt + max_new_tokens must also
+      fit — a ring cache instead evicts its oldest background pages, so
+      generation length is unbounded.
     """
 
-    def __init__(self, slots: int, capacity: int, chunk: int, *,
-                 ring: bool = True):
-        assert chunk >= 1 and capacity >= 1
+    def __init__(self, slots: int, capacity: Optional[int], chunk: int, *,
+                 ring: bool = True,
+                 default_sampling: Optional[SamplingParams] = None):
+        assert chunk >= 1 and (capacity is None or capacity >= 1)
         self.capacity = capacity
-        self.chunk = min(chunk, capacity)
+        self.chunk = chunk if capacity is None else min(chunk, capacity)
         self.ring = ring
+        self.default_sampling = default_sampling
         self.slots = [Slot() for _ in range(slots)]
         self.pending: deque = deque()
         self.done: List[Request] = []
@@ -86,15 +92,18 @@ class Scheduler:
     # ---- admission ---------------------------------------------------------
     def submit(self, req: Request) -> None:
         plen = int(len(req.prompt))
-        if plen > self.capacity:
-            raise ValueError(
-                f"prompt of {plen} tokens exceeds the engine's per-slot "
-                f"capacity of {self.capacity}")
-        if not self.ring and plen + req.max_new_tokens > self.capacity:
-            raise ValueError(
-                f"prompt {plen} + max_new_tokens {req.max_new_tokens} "
-                f"exceeds the dense cache capacity {self.capacity} "
-                "(only the MRA ring-paged cache evicts)")
+        if req.sampling is None:
+            req.sampling = self.default_sampling or SamplingParams()
+        if self.capacity is not None:
+            if plen > self.capacity:
+                raise ValueError(
+                    f"prompt of {plen} tokens exceeds the engine's per-slot "
+                    f"capacity of {self.capacity}")
+            if not self.ring and plen + req.max_new_tokens > self.capacity:
+                raise ValueError(
+                    f"prompt {plen} + max_new_tokens {req.max_new_tokens} "
+                    f"exceeds the dense cache capacity {self.capacity} "
+                    "(only the MRA ring-paged cache evicts)")
         if plen == 0 or req.max_new_tokens <= 0:
             # degenerate: nothing to condition on / nothing to sample — done
             # without occupying a slot or issuing a spurious decode step

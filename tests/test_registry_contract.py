@@ -1,0 +1,144 @@
+"""Registry serving-contract conformance: every family, one engine API.
+
+The continuous-batching engine is lifted above the cache type by a uniform
+per-layer protocol (DESIGN.md §12): each family module exposes
+``cache_specs`` / ``layer_cache_kinds`` / ``prefill_chunk`` / ``decode_step``
+with *identical* signatures, and the cache factory (serve/cache/) picks the
+backend from the per-layer kind strings. These tests pin the contract so a
+signature drift in one family fails here, not deep inside the engine.
+"""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import get_model, init_params
+from repro.models import recurrentgemma, registry, rwkv6, transformer
+from repro.serve import Engine, EngineConfig
+from repro.serve.cache import (HybridWindowCache, RecurrentStateCache,
+                               RingPagedKVCache, make_cache)
+
+FAMILIES = {"transformer": transformer, "rwkv6": rwkv6,
+            "recurrentgemma": recurrentgemma}
+SERVING_API = ("cache_specs", "layer_cache_kinds", "prefill", "prefill_chunk",
+               "decode_step")
+KNOWN_KINDS = {"paged_kv", "kv", "wkv", "window", "rglru"}
+
+ARCHS = {
+    "transformer": "qwen3-1.7b",
+    "rwkv6": "rwkv6-7b",
+    "recurrentgemma": "recurrentgemma-9b",
+}
+
+
+@pytest.mark.parametrize("name", sorted(FAMILIES))
+def test_family_exposes_serving_api(name):
+    mod = FAMILIES[name]
+    missing = [fn for fn in SERVING_API if not hasattr(mod, fn)]
+    assert not missing, f"{name} missing serving entry points: {missing}"
+
+
+@pytest.mark.parametrize("fn", SERVING_API)
+@pytest.mark.parametrize("name", ["rwkv6", "recurrentgemma"])
+def test_signatures_match_transformer_reference(name, fn):
+    """Positional/keyword layout must be identical across families — the
+    engine's jitted wrappers call every family the same way."""
+    ref = inspect.signature(getattr(transformer, fn))
+    got = inspect.signature(getattr(FAMILIES[name], fn))
+    ref_p = [(p.name, p.kind, p.default) for p in ref.parameters.values()]
+    got_p = [(p.name, p.kind, p.default) for p in got.parameters.values()]
+    assert got_p == ref_p, (
+        f"{name}.{fn} signature drifted from the transformer reference:\n"
+        f"  reference: {ref}\n  got:       {got}")
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_layer_cache_kinds_well_formed(name):
+    cfg = get_smoke_config(ARCHS[name])
+    kinds = get_model(cfg).layer_cache_kinds(cfg)
+    assert len(kinds) == cfg.num_layers
+    assert set(kinds) <= KNOWN_KINDS, kinds
+
+
+@pytest.mark.parametrize("name,backend", [
+    ("transformer", RingPagedKVCache),
+    ("rwkv6", RecurrentStateCache),
+    ("recurrentgemma", HybridWindowCache),
+])
+def test_cache_factory_routes_by_kinds(name, backend):
+    cfg = get_smoke_config(ARCHS[name])
+    model = get_model(cfg)
+    cache = make_cache(cfg, model, slots=2, max_len=32)
+    assert type(cache) is backend
+    assert cache.kinds == tuple(model.layer_cache_kinds(cfg))
+    # uniform surface regardless of backend
+    assert cache.lengths.shape == (2,)
+    assert isinstance(cache.paged, bool)
+    if not cache.supports_spec:
+        with pytest.raises(NotImplementedError):
+            cache.spec_snapshot(window=4)
+
+
+def test_engine_rejects_family_missing_entry_points(monkeypatch):
+    """A family without the serving contract fails fast at Engine
+    construction, naming what's missing."""
+    class Stub:
+        param_specs = staticmethod(rwkv6.param_specs)
+        cache_specs = staticmethod(rwkv6.cache_specs)
+        layer_cache_kinds = staticmethod(rwkv6.layer_cache_kinds)
+
+    cfg = get_smoke_config("rwkv6-7b").replace(family="stub")
+    monkeypatch.setitem(registry._FAMILIES, "stub", Stub)
+    params = init_params(rwkv6.param_specs(cfg), jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="prefill_chunk"):
+        Engine(cfg, params, EngineConfig(slots=1, max_len=16))
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_decode_step_active_mask_freezes_slots_bitwise(name):
+    """Uniform slot-isolation guarantee: with ``active`` low, a slot's cache
+    rows stay bit-for-bit across a decode dispatch, in every family."""
+    cfg = get_smoke_config(ARCHS[name])
+    model = get_model(cfg)
+    params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+    B, S = 3, 12
+    toks = np.random.default_rng(0).integers(1, cfg.vocab, (B, S)).astype(np.int32)
+    cache = init_params(model.cache_specs(cfg, B, 32), jax.random.PRNGKey(1))
+    _, cache = model.prefill_chunk(params, cfg, cache, jnp.asarray(toks),
+                                   jnp.full((B,), S, jnp.int32))
+    act = jnp.asarray([True, False, True])
+    _, after = model.decode_step(params, cfg, cache,
+                                 jnp.asarray([5, 6, 7], jnp.int32), active=act)
+
+    def check(spec, a0, a1):
+        # the ParamSpec axes name the batch dimension — no layout guessing
+        b_axis = spec.axes.index("batch")
+        frozen0 = np.asarray(jnp.take(a0, 1, axis=b_axis))
+        frozen1 = np.asarray(jnp.take(a1, 1, axis=b_axis))
+        assert np.array_equal(frozen0, frozen1), f"{name}: {spec} drifted"
+
+    jax.tree.map(check, model.cache_specs(cfg, B, 32), dict(cache),
+                 dict(after))
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_prefill_chunk_zero_valid_is_identity(name):
+    """An all-invalid chunk (num_valid == 0) must leave every cache leaf
+    bit-identical — slots ride through dispatches they don't take part in."""
+    cfg = get_smoke_config(ARCHS[name])
+    model = get_model(cfg)
+    params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+    B = 2
+    cache = init_params(model.cache_specs(cfg, B, 32), jax.random.PRNGKey(1))
+    toks = np.random.default_rng(1).integers(1, cfg.vocab, (B, 8)).astype(np.int32)
+    _, cache = model.prefill_chunk(params, cfg, cache, jnp.asarray(toks),
+                                   jnp.full((B,), 8, jnp.int32))
+    _, after = model.prefill_chunk(params, cfg, cache,
+                                   jnp.zeros((B, 8), jnp.int32),
+                                   jnp.zeros((B,), jnp.int32))
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        dict(cache), dict(after))
