@@ -8,7 +8,11 @@ Times three routes over the same inputs/selection budget:
 
 plus the serving-side twin (PR 5, DESIGN.md §11): chunk/decode attention
 against a KV cache through the fused Pallas serving kernel vs. the pure-jnp
-gather path, with the max |out| difference as the online parity check.
+gather path, with the max |out| difference as the online parity check. The
+serving kernel is dual-mode (PR 7): ``kernel_mode="auto"`` resolves decode
+to latency (single-query) tiles and chunks to throughput (multi-query MXU)
+tiles; extra rows force each mode on the chunk shape to price the tile
+choice and pin both against the jnp oracle.
 
 On a CPU host the Pallas kernels run in interpret mode, so the absolute
 numbers only demonstrate that the paths execute end-to-end; the
@@ -95,3 +99,19 @@ def run(emit):
         chunk_attention(qc, kc, vc, lengths, q_pos, spec_k)
         - chunk_attention(qc, kc, vc, lengths, q_pos, spec_j)).max())
     emit("kernel_bench_chunk_outdiff_kernel", 0.0, f"{diff:.2e}")
+
+    # forced tile modes (DESIGN.md §11): "auto" resolves decode to latency
+    # tiles and chunks to throughput tiles, so the rows above already time
+    # the production pairing. Forcing the off-diagonal — a C-token chunk
+    # through latency (single-query) tiles — prices the MXU-shaped tile
+    # against C single-row dispatch steps and pins both modes to the jnp
+    # oracle on the same inputs.
+    ref = chunk_attention(qc, kc, vc, lengths, q_pos, spec_j)
+    for mode in ("latency", "throughput"):
+        spec_m = spec_k.replace(kernel_mode=mode)
+        us = time_call(
+            lambda q: chunk_attention(q, kc, vc, lengths, q_pos, spec_m), qc)
+        diff = float(jnp.abs(
+            chunk_attention(qc, kc, vc, lengths, q_pos, spec_m) - ref).max())
+        emit(f"kernel_bench_chunk_c{C}_kernel_{mode}", us,
+             f"interpret={interpret} outdiff={diff:.2e}")

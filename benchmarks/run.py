@@ -74,14 +74,26 @@ def main() -> None:
     print("name,us_per_call,derived")
     rows = []
 
-    def emit(name, us, derived):
-        print(f"{name},{us:.1f},{derived}")
-        sys.stdout.flush()
-        rows.append({"name": name, "us_per_call": us, "derived": str(derived)})
+    def make_emit(suite):
+        def emit(name, us, derived):
+            print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+            rows.append({"name": name, "us_per_call": us,
+                         "derived": str(derived), "suite": suite})
+        return emit
 
     with mesh_utils.use_mesh(mesh):
         for name in chosen:
-            modules[name].run(emit)
+            modules[name].run(make_emit(name))
+
+    # schema check: every chosen suite must have emitted at least one row.
+    # A partial artifact (a module silently contributing nothing — e.g. an
+    # import-time skip or an exception swallowed upstream) must fail loudly
+    # here rather than be committed as the perf-trajectory baseline.
+    empty = [n for n in chosen if not any(r["suite"] == n for r in rows)]
+    if empty:
+        sys.exit(f"[bench] FATAL: suites emitted zero rows: {empty} — "
+                 "refusing to produce a partial artifact")
 
     if args.json:
         meta = {"mesh": args.mesh, "modules": chosen}

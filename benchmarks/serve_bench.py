@@ -116,6 +116,23 @@ def run(emit):
          f"{gen / dt:.1f} tokens_match={match}")
     assert match
 
+    # dual-mode contract (DESIGN.md §11): forcing either tile mode for every
+    # dispatch must leave the engine's token streams bit-identical to the
+    # jnp reference — the mode is a performance knob, never a numerics knob.
+    for mode in ("latency", "throughput"):
+        eng = Engine(kcfg, params, EngineConfig(
+            slots=2, max_len=64, chunk=8, mesh=mesh, kernel_mode=mode))
+        eng.run(reqs[:1])  # warmup: compile the forced-mode executables
+        eng.reset_stats()
+        t0 = time.perf_counter()
+        done = eng.run(reqs)
+        dt = time.perf_counter() - t0
+        gen = eng.stats["generated_tokens"]
+        match = all(np.array_equal(r.out, by[len(r.prompt)]) for r in done)
+        emit(f"serve_kernel_{mode}_tok_per_s", dt / max(gen, 1) * 1e6,
+             f"{gen / dt:.1f} tokens_match={match}")
+        assert match, mode
+
     # recurrent/hybrid families through the same engine (DESIGN.md §12):
     # rwkv6's O(1) wkv state and recurrentgemma's RG-LRU + window ring serve
     # under identical continuous batching; the dispatch-economy claim is the

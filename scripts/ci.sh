@@ -4,7 +4,12 @@
 # kernels run in interpret mode inside the tests — training fwd+bwd
 # (tests/test_differential.py, tests/test_kernels_block_sparse.py) and the
 # fused chunk/decode serving kernel (tests/test_chunk_kernel.py, DESIGN.md
-# §11) — so both TPU paths are exercised end-to-end on every CPU run. The
+# §11), whose in-kernel top-m selection differential subset runs in BOTH
+# tile modes (latency single-query + throughput multi-query MXU tiles,
+# test_kernel_forced_modes_match_jnp / test_kernel_oversubscribed_budget)
+# and stays interpret-mode-bounded (small nb, C <= 5) so the fast tier's
+# wall time holds — so both TPU paths are exercised end-to-end on every
+# CPU run. The
 # fast tier also pins the cross-family serving contract: registry signature
 # conformance (tests/test_registry_contract.py) and the recurrent/hybrid
 # engine's batched == solo guarantees (tests/test_recurrent_engine.py,

@@ -49,6 +49,11 @@ class ModelConfig:
     attn_use_kernel: bool = False
     attn_interpret: bool = False
     attn_kernel_bwd: str = "pallas"
+    # serving-kernel dispatch mode (DESIGN.md §11): "auto" lets each jitted
+    # entry point pick at trace time (decode_step -> latency single-query
+    # tiles, prefill_chunk -> throughput multi-query tiles); "latency" /
+    # "throughput" force one tile shape for every dispatch.
+    attn_kernel_mode: str = "auto"
     # Mesh-sharded attention: run every attention layer inside a shard_map
     # over the active mesh (batch -> data axes, kv-heads -> model axis).
     # Required for the Pallas kernel path on a mesh (XLA cannot partition
@@ -103,6 +108,7 @@ class ModelConfig:
                 use_kernel=True,
                 interpret=self.attn_interpret,
                 kernel_bwd=self.attn_kernel_bwd,
+                kernel_mode=self.attn_kernel_mode,
             )
         if self.attn_shard:
             spec = dataclasses.replace(spec, shard=True)

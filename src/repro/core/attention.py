@@ -59,6 +59,9 @@ class AttentionSpec:
     softmax_scale: Optional[float] = None
     use_kernel: bool = False
     kernel_bwd: str = "pallas"  # bwd impl on the kernel path: pallas | jnp
+    # serving-kernel dispatch mode (DESIGN.md §11): "latency" | "throughput"
+    # | "auto" (decode waves -> latency, prefill/verify chunks -> throughput)
+    kernel_mode: str = "auto"
     interpret: bool = False
     shard: bool = False
     # beyond-paper (§Perf Y3): int8 KV cache with per-token-per-head scales —
@@ -80,6 +83,7 @@ class AttentionSpec:
             softmax_scale=self.softmax_scale,
             use_kernel=self.use_kernel,
             kernel_bwd=self.kernel_bwd,
+            kernel_mode=self.kernel_mode,
             interpret=self.interpret,
         )
 

@@ -58,6 +58,11 @@ class MraConfig:
         it serves training and arbitrary-length traffic (DESIGN.md §3).
       kernel_bwd: backward implementation when use_kernel — "pallas" (fused
         recompute kernels) or "jnp" (gather/recompute fallback, kernels/ref).
+      kernel_mode: serving-kernel tile shape (kernels/chunk_attn.py,
+        DESIGN.md §11) — "latency" (single-query tiles, decode waves) |
+        "throughput" (multi-query MXU tiles, prefill/verify chunks) |
+        "auto" (resolved per dispatch at trace time from the chunk width).
+        Ignored by the full-sequence training path.
       interpret: run the Pallas kernels in interpret mode (CPU validation).
     """
 
@@ -70,6 +75,7 @@ class MraConfig:
     compute_dtype: jnp.dtype = jnp.float32
     use_kernel: bool = False
     kernel_bwd: str = "pallas"
+    kernel_mode: str = "auto"
     interpret: bool = False
 
     def budget(self, n: int) -> int:

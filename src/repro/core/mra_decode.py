@@ -219,39 +219,58 @@ def mra2_coarse_decode_attention(
 class ChunkPrelude(NamedTuple):
     """Shared jnp half of chunk/decode MRA attention (DESIGN.md §11).
 
-    Coarse page scoring + top-m selection stay in jnp on both routes; the
-    pure path continues with the gather/exp/normalize tail below, the Pallas
-    route (``kernels/chunk_attn.py``) consumes these fields and fuses that
-    tail on-chip. ``scale``/``block_size`` are static trace-time values.
+    Only the page *statistics* — grouped queries, the page table/counts and
+    the k/v page means. Coarse scoring, the causal block mask, own-block
+    force selection and top-m all happen downstream: in jnp on the oracle
+    route (``_select_pages``), *inside the kernel* on the Pallas route
+    (``kernels/chunk_attn.py``), so no coarse-score tensor reaches HBM
+    there. ``scale``/``block_size`` are static trace-time values.
     """
 
     qg: jax.Array        # (B, Hkv, G, C, D) grouped queries, compute dtype
     pb: jax.Array        # (B, nb) page table (identity when unpaged)
     counts: jax.Array    # (B, nb) valid tokens per page
+    k_ds: jax.Array      # (B, Hkv, nb, D) per-page K means (coarse keys)
     v_ds: jax.Array      # (B, Hkv, nb, D) per-page V means
-    coarse_m: jax.Array  # (B, Hkv, G, C, nb) masked coarse scores
-    y_idx: jax.Array     # (B, Hkv, G, C, m) selected physical pages
-    sel_ok: jax.Array    # (B, Hkv, G, C, m) selection validity
-    allowed: jax.Array   # (B, 1, 1, C|1, nb)-broadcastable support mask
-    own: jax.Array       # same shape: query's own block
     scale: float
     block_size: int
 
 
+class PageSelection(NamedTuple):
+    """jnp-route top-m page selection (the kernel's in-chip mirror)."""
+
+    coarse_m: jax.Array  # (B, Hkv, G, C, nb) masked coarse scores
+    y_idx: jax.Array     # (B, Hkv, G, C, m) selected physical pages
+    sel_ok: jax.Array    # (B, Hkv, G, C, m) selection validity
+    allowed: jax.Array   # (B, 1, 1, C, nb) valid-target support mask
+    ownl: jax.Array      # (B, 1, 1, C, nb) query's own *live* block
+
+
 def _chunk_prelude(q, k_cache, v_cache, lengths, q_pos, cfg, decode_blocks,
                    pyramid, page_blocks) -> ChunkPrelude:
-    """Page stats, coarse scores, and top-m page selection (jnp, both routes)."""
+    """Page stats shared by the jnp and Pallas routes."""
     B, Hq, C, D = q.shape
     Hkv, S = k_cache.shape[1], k_cache.shape[2]
-    G = Hq // Hkv
     b = cfg.block_size
-    assert S % b == 0, (S, b)
+    if Hq % Hkv != 0:
+        raise ValueError(
+            f"query heads {Hq} (q {q.shape}) are not a multiple of KV heads "
+            f"{Hkv} (k_cache {k_cache.shape}); GQA grouping is impossible")
+    if S % b != 0:
+        raise ValueError(
+            f"KV cache length {S} (k_cache {k_cache.shape}) is not a "
+            f"multiple of block_size {b}; the cache cannot be paged into "
+            f"whole pyramid blocks")
+    G = Hq // Hkv
     nb = S // b
-    m = min(decode_blocks, nb)
     scale = cfg.softmax_scale if cfg.softmax_scale is not None else 1.0 / (D**0.5)
     cdt = cfg.compute_dtype
 
     pb = page_blocks if page_blocks is not None else identity_page_table(B, nb)
+    if pb.shape != (B, nb):
+        raise ValueError(
+            f"page_blocks shape {pb.shape} does not match (B, nb) = "
+            f"({B}, {nb}) for k_cache {k_cache.shape}, block_size {b}")
     counts = paged_block_counts(lengths, pb, b).astype(cdt)  # (B, nb)
     if pyramid is None:
         mask = paged_position_mask(lengths, pb, S, b).astype(k_cache.dtype)
@@ -268,21 +287,42 @@ def _chunk_prelude(q, k_cache, v_cache, lengths, q_pos, cfg, decode_blocks,
     v_ds = v_sum / denom
 
     qg = q.reshape(B, Hkv, G, C, D).astype(cdt)
-    coarse = jnp.einsum("bhgcd,bhyd->bhgcy", qg, k_ds) * scale  # (B,Hkv,G,C,nb)
-    live = counts > 0  # (B, nb)
+    return ChunkPrelude(qg, pb, counts, k_ds, v_ds, scale, b)
+
+
+def _select_pages(pre: ChunkPrelude, q_pos, m: int) -> PageSelection:
+    """Coarse scores, causal block mask, and top-m selection (jnp oracle).
+
+    The Pallas route mirrors this math on-chip (kernels/chunk_attn.py); the
+    two must select identical page sets, so any change here is a kernel
+    contract change (tests/test_chunk_kernel.py pins the equivalence).
+
+    Selection validity is carried as an explicit mask: a page is a valid
+    exact-attention target iff it is live and causally allowed (the query's
+    own block, when live, is always allowed). A *dead* own block — a fresh
+    slot whose query block holds zero live tokens — is neither
+    force-selected nor valid, so such rows produce exact zeros instead of
+    attending stale cache garbage. (The old sentinel ``top_vals >
+    NEG_INF * 0.5`` let the FORCE_BONUS of a dead own block pass the
+    threshold; the mask-derived ``sel_ok`` cannot.)
+    """
+    b = pre.block_size
+    live = pre.counts > 0  # (B, nb)
     jq = q_pos // b  # (B, C) query block index
-    pb_q = pb[:, None, None, None, :]  # (B,1,1,1,nb)
+    pb_q = pre.pb[:, None, None, None, :]  # (B,1,1,1,nb)
     jq_q = jq[:, None, None, :, None]  # (B,1,1,C,1)
     # causal at block granularity: past blocks are background candidates, the
-    # query's own block is force-selected (exactly masked), future excluded.
+    # query's own live block is force-selected (exactly masked), future
+    # excluded. allowed == the valid-selection mask (own ∧ live ⊆ allowed).
     allowed = live[:, None, None, None, :] & (pb_q <= jq_q)
-    own = pb_q == jq_q
-    coarse_m = jnp.where(allowed, coarse, NEG_INF)
-    sel_scores = coarse_m + FORCE_BONUS * own
-    top_vals, y_idx = jax.lax.top_k(sel_scores, m)  # (B, Hkv, G, C, m)
-    sel_ok = top_vals > NEG_INF * 0.5
-    return ChunkPrelude(qg, pb, counts, v_ds, coarse_m, y_idx, sel_ok,
-                        allowed, own, scale, b)
+    ownl = (pb_q == jq_q) & (pb_q >= 0) & live[:, None, None, None, :]
+    coarse = jnp.einsum("bhgcd,bhyd->bhgcy", pre.qg, pre.k_ds) * pre.scale
+    coarse_m = jnp.where(allowed, coarse, NEG_INF)  # (B,Hkv,G,C,nb)
+    sel_scores = coarse_m + FORCE_BONUS * ownl
+    _, y_idx = jax.lax.top_k(sel_scores, m)  # (B, Hkv, G, C, m)
+    sel_ok = jnp.take_along_axis(
+        jnp.broadcast_to(allowed, sel_scores.shape), y_idx, axis=-1)
+    return PageSelection(coarse_m, y_idx, sel_ok, allowed, ownl)
 
 
 def mra2_chunk_attention(
@@ -309,10 +349,14 @@ def mra2_chunk_attention(
     background. With C == 1 and ``q_pos == lengths - 1`` this is numerically
     identical to the decode path (tests/test_engine.py pins it).
 
-    With ``cfg.use_kernel`` the selection prelude stays here and the
-    gather/two-level-softmax/background/normalize tail runs in the fused
-    Pallas serving kernel (``kernels/chunk_attn.py``, DESIGN.md §11);
-    forward-only — the serving path is never differentiated.
+    With ``cfg.use_kernel`` only the page-stats prelude stays here: coarse
+    scoring, top-m selection and the gather/two-level-softmax/background/
+    normalize tail all run inside the fused Pallas serving kernel
+    (``kernels/chunk_attn.py``, DESIGN.md §11) in one of two MXU-shaped
+    modes — ``cfg.kernel_mode`` "latency" (single-query tiles) or
+    "throughput" (multi-query tiles), with "auto" resolving at trace time
+    from C. Forward-only — the serving path is never differentiated. This
+    jnp route is the differential oracle the kernel is pinned against.
 
     Args:
       q: (B, Hq, C, D) chunk queries; their K/V must already be in the cache.
@@ -329,21 +373,28 @@ def mra2_chunk_attention(
     b = cfg.block_size
     nb = S // b
     cdt = cfg.compute_dtype
+    if q_pos.shape != (B, C):
+        raise ValueError(
+            f"q_pos shape {q_pos.shape} does not match (B, C) = ({B}, {C}) "
+            f"of q {q.shape}")
 
     pre = _chunk_prelude(q, k_cache, v_cache, lengths, q_pos, cfg,
                          decode_blocks, pyramid, page_blocks)
+    m = min(decode_blocks, nb)
     if cfg.use_kernel:
         from repro.kernels.chunk_attn import chunk_attention_kernel
 
         out = chunk_attention_kernel(
-            pre, k_cache, v_cache, q_pos, k_scale=k_scale, v_scale=v_scale,
-            include_bg=cfg.variant == "full", interpret=cfg.interpret)
+            pre, k_cache, v_cache, q_pos, m=m, k_scale=k_scale,
+            v_scale=v_scale, include_bg=cfg.variant == "full",
+            interpret=cfg.interpret, mode=cfg.kernel_mode)
         return out.astype(q.dtype)
 
     qg, pb, counts = pre.qg, pre.pb, pre.counts
-    v_ds, coarse_m = pre.v_ds, pre.coarse_m
-    y_idx, sel_ok = pre.y_idx, pre.sel_ok
-    allowed, own, scale = pre.allowed, pre.own, pre.scale
+    v_ds, scale = pre.v_ds, pre.scale
+    sel = _select_pages(pre, q_pos, m)
+    coarse_m, y_idx, sel_ok = sel.coarse_m, sel.y_idx, sel.sel_ok
+    allowed, own = sel.allowed, sel.ownl
 
     c = jnp.maximum(jnp.max(coarse_m, axis=-1), NEG_INF * 0.5)  # (B,Hkv,G,C)
 

@@ -15,8 +15,11 @@ unsharded — so the correct mesh mapping is a ``shard_map`` over
 
 Inside the region every path (jnp, Pallas fwd + custom_vjp bwd, and the
 fused chunk/decode serving kernel of DESIGN.md §11 — its ``use_kernel`` /
-``interpret`` fields travel inside the spec dataclass like every other
-flag) runs its ordinary single-device code on the local shard; no
+``interpret`` / ``kernel_mode`` fields travel inside the spec dataclass
+like every other flag, so the latency and throughput tile shapes both run
+per-shard without any code here knowing about them; the in-kernel top-m
+selection is per-(batch, kv-head) independent exactly like the rest of
+the math) runs its ordinary single-device code on the local shard; no
 collectives are needed in the forward, and the backward's grad all-reduce
 over the batch axes is the ``shard_map`` transpose of the batch in_specs (a
 psum placed by JAX, not by us — see DESIGN.md §8).

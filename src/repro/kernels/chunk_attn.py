@@ -1,41 +1,49 @@
 """Pallas TPU kernel: ring-paged chunk/decode MRA attention for serving.
 
 This is the serving-side twin of the training kernels in
-``block_sparse_attn.py`` (DESIGN.md §11). The pure-jnp serving hot path
-(``core/mra_decode.py::mra2_chunk_attention``) materializes an
-``(B, Hkv, G, C, m, b, D)`` gathered-page tensor and the matching exp-weight
-tensors in HBM on every decode wave and verify chunk; this kernel keeps the
-gather on-chip: the per-query *selected page ids* ride in SMEM via
-``PrefetchScalarGridSpec`` and the BlockSpec ``index_map`` DMAs exactly the
-selected K/V pages HBM→VMEM, one page per grid step.
+``block_sparse_attn.py`` (DESIGN.md §11). Everything after the shared page
+statistics — coarse page scoring, the causal block mask, own-block force
+selection, top-m selection, the gathered exact term, the coarse pyramid
+background and the final normalization — runs *inside one kernel*:
 
-Grid: ``(BQ, m)`` with ``BQ = B·Hkv·G·C`` flattened query rows (decode is the
-C == 1 case) and ``m`` the selection budget. Output-tile revisits of a row
-are consecutive, so the per-row accumulators (numerator tile, row sum,
-running max) stay resident in VMEM between grid steps — the same
-sequential-grid accumulation contract the training kernels rely on.
+  * in-kernel selection — the coarse scores ``q · k̄_y · scale`` are an
+    MXU matmul against the resident ``k_ds`` page-means tile, so the
+    ``(B, Hkv, G, C, nb)`` coarse-score tensor never exists in HBM and the
+    separate ``jax.lax.top_k`` pass disappears. Top-m is m static rounds of
+    (row-max, lowest-column-among-ties) — exactly ``jax.lax.top_k``'s
+    first-index tie-break — masked to the *valid* pages
+    (live ∧ causally allowed); the query's own live block is force-selected
+    via the shared FORCE_BONUS, matching the jnp oracle bit-for-bit in
+    which pages get selected.
+  * MXU-shaped tiles — the grid is ``(B·Hkv, C/C_tile)``: each step scores a
+    ``(G·C_tile, b)`` tile per page and a ``(G·C_tile, nb)`` coarse tile,
+    real matmuls instead of the old single-query-row dots.
+  * gather by manual DMA — selected K/V pages are copied HBM→VMEM with
+    ``pltpu.make_async_copy`` from ``ANY``-space cache refs, one
+    ``pl.when``-guarded fetch per page in the selection union, fused with a
+    flash-style online softmax (running per-row max, rescaled accumulators)
+    and the exact ``pos_k <= q_pos`` mask. No ``(…, m, b, D)`` gather tensor
+    ever reaches HBM. int8 pages are dequantized in VMEM from per-token
+    scale slices.
+  * background + normalize — the coarse background
+    ``Σ_bg exp(μ − c)·count_y · v̄_y`` is a ``(rows, nb) @ (nb, D)`` matmul
+    against the resident ``v_ds`` tile, aligned onto the two-level
+    stabilizer ``c_tok = max(c, fine_max)``; the normalized output is
+    emitted directly (all-masked rows → exact zeros).
 
-Fused per query row (matching the jnp path's math, DESIGN.md §11):
+Dual mode (DESIGN.md §11): the same body is instantiated at two static
+query-tile widths, selected per dispatch —
 
-  * exact term — flash-style *online* softmax over the m selected pages:
-    each page raises a running per-query max and rescales the resident
-    numerator/row-sum by ``exp(m_old − m_new)``; masked exactly to
-    ``pos_k <= q_pos`` inside the (possibly partial) pages.
-  * int8 dequant — when the cache is quantized, the gathered page is
-    dequantized *in kernel* from the per-token scales tile (the jnp path's
-    gather-then-dequant, without the HBM round trip).
-  * coarse background — at the last grid step the masked coarse score row
-    (computed in jnp for the top-m selection anyway) is turned into the
-    background term ``Σ_bg exp(μ − c)·count_y · v̄_y`` against the resident
-    ``v_ds`` page-means tile, aligned onto the per-token stabilizer
-    ``c_tok = max(c, fine_max)`` by ``exp(c − c_tok)`` — the two-level
-    stabilizer of DESIGN.md §3, decode flavor.
-  * the normalized output is emitted directly (all-masked rows → 0), so no
-    unnormalized intermediates ever reach HBM.
+  * ``latency``    — C_tile = 1: one wave per (batch·kv-head) row; minimal
+    work per step, the decode (C == 1) shape.
+  * ``throughput`` — C_tile = min(C, 8): multi-query tiles for verify
+    chunks and chunked prefill; the MXU sees (G·C_tile, ·) operands.
 
-Top-m page selection stays in jnp: the coarse scores are O(C·nb) and feed
-``jax.lax.top_k``; what the kernel removes is the O(m·b·D) gather traffic
-and the fused softmax/background/normalize passes over it.
+``mode="auto"`` resolves at trace time (C == 1 → latency, else throughput),
+which is how the engine picks per dispatch: decode waves trace with C == 1,
+prefill/verify chunks with C == chunk. ``EngineConfig.kernel_mode`` forces
+one mode for every dispatch. Ragged chunks (C not a multiple of C_tile) are
+padded with ``q_pos = -1`` rows, which select nothing and are sliced off.
 
 Forward-only by design: the serving path is never differentiated (training
 uses the §3 kernels). Differentiating through this op raises at trace time.
@@ -49,7 +57,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro.core.mra import NEG_INF  # shared finite "minus infinity" sentinel
+from repro.core.mra import NEG_INF, FORCE_BONUS
+
+KERNEL_MODES = ("auto", "latency", "throughput")
+THROUGHPUT_C_TILE = 8  # query-tile width of the throughput instantiation
+# removal sentinel for already-picked selection entries: strictly below
+# NEG_INF so a picked page can never win a later round, and below any
+# masked-off score so exhausted rows keep re-picking an already-dead column
+_PICKED = -2e9
+
+
+def resolve_kernel_mode(mode: str, C: int) -> str:
+    """'auto' → latency for single-query (decode) traces, else throughput."""
+    if mode not in KERNEL_MODES:
+        raise ValueError(
+            f"kernel_mode must be one of {KERNEL_MODES}, got {mode!r}")
+    if mode == "auto":
+        return "latency" if C == 1 else "throughput"
+    return mode
 
 
 def _dot(a, b_, dims):
@@ -58,25 +83,29 @@ def _dot(a, b_, dims):
 
 
 def _chunk_kernel(
-    # scalar prefetch (SMEM)
-    ysel_ref,   # (BQ, m) selected *physical* page ids (drive the DMA)
-    blk_ref,    # (BQ, m) logical block of each selection (-1 dead)
-    selok_ref,  # (BQ, m) 1 = selection valid (top_k hit a live allowed page)
-    qpos_ref,   # (BQ, 1) global position of the query token
     # VMEM tiles
-    q_ref,      # (1, D) query row
-    k_ref,      # (1, 1, b, D) selected K page
-    v_ref,      # (1, 1, b, D) selected V page
-    ks_ref,     # (1, 1, b) K dequant scales ((1,1,b) dummy when not quant)
-    vs_ref,     # (1, 1, b) V dequant scales
-    coarse_ref,  # (1, nb) masked coarse scores (NEG_INF off-support)
-    counts_ref,  # (1, nb) valid tokens per page
-    pb_ref,     # (1, nb) page table row (logical block per page, -1 dead)
-    vds_ref,    # (1, nb, D) per-page V means (coarse background values)
-    # outputs (accumulators resident across the m grid steps of a row)
-    o_ref,      # (1, D) numerator, normalized in place at the last step
-    rs_ref,     # (1, 1) row sum
-    mt_ref,     # (1, 1) running fine-score max
+    q_ref,       # (1, G, Ct, D) query tile (fp32)
+    qpos_ref,    # (1, G, Ct, 1) int32 global positions (-1 = padded row)
+    kds_ref,     # (1, nb, D) per-page K means (coarse scoring keys)
+    vds_ref,     # (1, nb, D) per-page V means (coarse background values)
+    counts_ref,  # (1, nb) f32 valid tokens per page
+    pb_ref,      # (1, nb) int32 page table row (logical block, -1 dead)
+    # ANY-space refs (manual DMA sources)
+    k_any,       # (BKV, nb, b, D) cache dtype
+    v_any,       # (BKV, nb, b, D)
+    ks_any,      # (BKV, nb, b, 1) f32 dequant scales ((1,1,1,1) dummy)
+    vs_any,      # (BKV, nb, b, 1)
+    # output
+    o_ref,       # (1, G, Ct, D) f32
+    # scratch
+    kpage,       # (b, D) VMEM landing pad for one K page
+    vpage,       # (b, D)
+    kspage,      # (b, 1) per-token K scales for the page
+    vspage,      # (b, 1)
+    sems,        # (4,) DMA semaphores
+    acc_ref,     # (rows, D) f32 online-softmax numerator
+    rs_ref,      # (rows, 1) f32 row sum
+    mt_ref,      # (rows, 1) f32 running fine-score max
     *,
     scale: float,
     block_size: int,
@@ -85,65 +114,112 @@ def _chunk_kernel(
     include_bg: bool,
 ):
     r = pl.program_id(0)
-    i = pl.program_id(1)
     b = block_size
+    _, G, Ct, D = q_ref.shape
+    nb = kds_ref.shape[1]
+    rows = G * Ct
 
-    @pl.when(i == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-        rs_ref[...] = jnp.zeros_like(rs_ref)
-        mt_ref[...] = jnp.zeros_like(mt_ref) + NEG_INF
+    q = q_ref[0].reshape(rows, D)                 # fp32 query tile
+    qp = qpos_ref[0].reshape(rows, 1)             # int32, lane dim kept
+    kds = kds_ref[0]                              # (nb, D)
+    pbrow = pb_ref[...]                           # (1, nb)
+    cnt = counts_ref[...]                         # (1, nb)
 
-    q = q_ref[...].astype(jnp.float32)      # (1, D)
-    k = k_ref[0, 0].astype(jnp.float32)     # (b, D)
-    v = v_ref[0, 0].astype(jnp.float32)
-    if quant:  # int8 pages: dequantize in VMEM from the per-token scales
-        k = k * ks_ref[0, 0][:, None]
-        v = v * vs_ref[0, 0][:, None]
+    # ---- in-kernel coarse scores + causal/validity masks -------------------
+    coarse = _dot(q, kds, ((1,), (1,))) * scale   # (rows, nb) — MXU matmul
+    jq = qp // b                                  # query block (−1 for pads)
+    live = cnt > 0.0
+    allowed = live & (pbrow <= jq)                # live past+own pages
+    ownl = (pbrow == jq) & (pbrow >= 0) & live    # query's own live block
+    # a page is a valid exact-attention target iff causally allowed and live
+    # (own ⊆ allowed when live); dead own blocks are NOT force-selected —
+    # the selection-validity contract shared with the jnp oracle.
+    coarse_m = jnp.where(allowed, coarse, NEG_INF)
+    selsc = coarse_m + FORCE_BONUS * ownl.astype(jnp.float32)
 
-    s = _dot(q, k, ((1,), (1,))) * scale    # (1, b)
-    qpos = qpos_ref[r, 0]
-    blk = blk_ref[r, i]
-    pos = blk * b + jax.lax.broadcasted_iota(jnp.int32, (1, b), 1)
-    ok = (selok_ref[r, i] == 1) & (blk >= 0) & (pos <= qpos)
+    # ---- in-kernel top-m: m rounds of (row max, first column among ties) ---
+    col = jax.lax.broadcasted_iota(jnp.int32, (rows, nb), 1)
+    sel_grid = jnp.zeros((rows, nb), dtype=bool)
+    for _ in range(m):
+        val = jnp.max(selsc, axis=1, keepdims=True)
+        pick = jnp.min(jnp.where(selsc == val, col, nb), axis=1, keepdims=True)
+        one = col == pick
+        sel_grid = sel_grid | (one & allowed)     # invalid picks select nothing
+        selsc = jnp.where(one, _PICKED, selsc)
 
-    # online two-level stabilization (flash-style): raise the running max,
-    # shrink the resident accumulators, add this page at the new max.
-    m_old = mt_ref[0, 0]
-    m_new = jnp.maximum(m_old, jnp.max(jnp.where(ok, s, NEG_INF)))
-    alpha = jnp.exp(m_old - m_new)  # ≤ 1; underflows to 0 from the NEG_INF init
-    a = jnp.where(ok, jnp.exp(jnp.minimum(s - m_new, 0.0)), 0.0)
-    o_ref[...] = o_ref[...] * alpha + _dot(a, v, ((1,), (0,)))
-    rs_ref[...] = rs_ref[...] * alpha + jnp.sum(a)
-    mt_ref[...] = jnp.zeros_like(mt_ref) + m_new
+    # ---- exact term: DMA-gather the selection union, online softmax --------
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    rs_ref[...] = jnp.zeros_like(rs_ref)
+    mt_ref[...] = jnp.zeros_like(mt_ref) + NEG_INF
+    col1 = jax.lax.broadcasted_iota(jnp.int32, (1, nb), 1)
+    sel_any = jnp.max(sel_grid.astype(jnp.float32), axis=0, keepdims=True)
 
-    @pl.when(i == m - 1)
-    def _finalize():
-        coarse = coarse_ref[...]            # (1, nb), NEG_INF off-support
-        c = jnp.maximum(jnp.max(coarse), NEG_INF * 0.5)
-        mt = mt_ref[0, 0]
-        c_tok = jnp.maximum(c, mt)          # two-level per-token stabilizer
-        fine_adj = jnp.exp(mt - c_tok)      # mt ≤ c_tok, so ≤ 1
-        out = o_ref[...] * fine_adj
-        rs = rs_ref[0, 0] * fine_adj
-        if include_bg:  # MRA-2 "full": coarse pyramid background
-            cnt = counts_ref[...]           # (1, nb)
-            pb = pb_ref[...]                # (1, nb)
-            jq = qpos_ref[r, 0] // b
-            # background support: live past pages minus the query's own block
-            # minus the exactly-evaluated selections (jnp's bg mask).
-            bg = (cnt > 0.0) & (pb <= jq) & (pb != jq)
-            col = jax.lax.broadcasted_iota(jnp.int32, (1, coarse.shape[1]), 1)
-            for j in range(m):  # static unroll: m is small, SMEM reads scalar
-                bg = bg & ~((selok_ref[r, j] == 1) & (col == ysel_ref[r, j]))
-            # coarse ≤ c on the support by construction, so exp arg ≤ 0
-            w = jnp.where(bg, jnp.exp(coarse - c), 0.0) * cnt
-            adj = jnp.exp(c - c_tok)
-            vds = vds_ref[0].astype(jnp.float32)  # (nb, D)
-            out = out + adj * _dot(w, vds, ((1,), (0,)))
-            rs = rs + adj * jnp.sum(w)
-        alive = rs > 0.0
-        o_ref[...] = jnp.where(alive, out, 0.0) / jnp.where(alive, rs, 1.0)
+    def page_body(j, _):
+        picked = jnp.sum(jnp.where(col1 == j, sel_any, 0.0)) > 0.0
+
+        @pl.when(picked)
+        def _fetch_and_accumulate():
+            cp_k = pltpu.make_async_copy(k_any.at[r, j], kpage, sems.at[0])
+            cp_v = pltpu.make_async_copy(v_any.at[r, j], vpage, sems.at[1])
+            cp_k.start()
+            cp_v.start()
+            if quant:
+                cp_ks = pltpu.make_async_copy(ks_any.at[r, j], kspage,
+                                              sems.at[2])
+                cp_vs = pltpu.make_async_copy(vs_any.at[r, j], vspage,
+                                              sems.at[3])
+                cp_ks.start()
+                cp_vs.start()
+            cp_k.wait()
+            cp_v.wait()
+            k = kpage[...].astype(jnp.float32)
+            vv = vpage[...].astype(jnp.float32)
+            if quant:  # int8 pages: dequantize in VMEM from per-token scales
+                cp_ks.wait()
+                cp_vs.wait()
+                k = k * kspage[...]
+                vv = vv * vspage[...]
+            s = _dot(q, k, ((1,), (1,))) * scale          # (rows, b) on MXU
+            blk = jnp.sum(jnp.where(col1 == j, pbrow, 0))  # logical block id
+            pos = blk * b + jax.lax.broadcasted_iota(jnp.int32, (1, b), 1)
+            selcol = jnp.max(
+                jnp.where(col1 == j, sel_grid.astype(jnp.float32), 0.0),
+                axis=1, keepdims=True) > 0.0              # (rows, 1)
+            ok = selcol & (pos >= 0) & (pos <= qp)
+            # flash-style online stabilization: raise the running max, shrink
+            # the resident accumulators, add this page at the new max
+            m_old = mt_ref[...]
+            m_new = jnp.maximum(
+                m_old, jnp.max(jnp.where(ok, s, NEG_INF), axis=1,
+                               keepdims=True))
+            alpha = jnp.exp(m_old - m_new)
+            a = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+            acc_ref[...] = acc_ref[...] * alpha + _dot(a, vv, ((1,), (0,)))
+            rs_ref[...] = rs_ref[...] * alpha + jnp.sum(a, axis=1,
+                                                        keepdims=True)
+            mt_ref[...] = m_new
+
+        return 0
+
+    jax.lax.fori_loop(0, nb, page_body, 0)
+
+    # ---- background + two-level stabilizer + normalize ---------------------
+    c = jnp.maximum(jnp.max(coarse_m, axis=1, keepdims=True), NEG_INF * 0.5)
+    mt = mt_ref[...]
+    c_tok = jnp.maximum(c, mt)                    # two-level stabilizer
+    fine_adj = jnp.exp(mt - c_tok)                # mt ≤ c_tok, so ≤ 1
+    out = acc_ref[...] * fine_adj
+    rs = rs_ref[...] * fine_adj
+    if include_bg:  # MRA-2 "full": coarse pyramid background
+        bg = allowed & ~ownl & ~sel_grid
+        w = jnp.where(bg, jnp.exp(coarse_m - c), 0.0) * cnt
+        adj = jnp.exp(c - c_tok)
+        vds = vds_ref[0]                          # (nb, D)
+        out = out + adj * _dot(w, vds, ((1,), (0,)))   # (rows, nb)@(nb, D)
+        rs = rs + adj * jnp.sum(w, axis=1, keepdims=True)
+    alive = rs > 0.0
+    o = jnp.where(alive, out, 0.0) / jnp.where(alive, rs, 1.0)
+    o_ref[0] = o.reshape(G, Ct, D)
 
 
 def _no_grad(*args, **kw):
@@ -153,67 +229,61 @@ def _no_grad(*args, **kw):
 
 
 @functools.partial(
-    jax.custom_jvp, nondiff_argnums=(12, 13, 14, 15, 16, 17))
+    jax.custom_jvp, nondiff_argnums=(10, 11, 12, 13, 14, 15, 16))
 def _chunk_attention_call(
-    q2, k4, v4, ks3, vs3, coarse2, counts2, pb2, vds3,
-    ysel, blk, qselok,
-    scale, block_size, m, quant, include_bg, interpret,
+    q4, qpos4, kds3, vds3, counts2, pb2, k4, v4, ks4, vs4,
+    scale, block_size, m, c_tile, quant, include_bg, interpret,
 ):
-    """pallas_call entry. q2 (BQ, D); k4/v4 (BKV, nb, b, D); coarse2 (BQ, nb);
-    counts2/pb2 (B, nb); vds3 (BKV, nb, D); ysel/blk (BQ, m) int32;
-    qselok (BQ, m + 1) int32 = [q_pos | selok] packed (q_pos column first)."""
-    BQ, D = q2.shape
-    BKV, nb, b, _ = k4.shape
+    """pallas_call entry. q4 (BKV, G, Cp, D) fp32; qpos4 (BKV, G, Cp, 1)
+    int32 (−1 = padded row); kds3/vds3 (BKV, nb, D) fp32; counts2/pb2
+    (B, nb); k4/v4 (BKV, nb, b, D) cache dtype; ks4/vs4 (BKV, nb, b, 1)
+    fp32 scales ((1, 1, 1, 1) dummies when not ``quant``). ``Cp`` must be a
+    multiple of the static query-tile width ``c_tile``."""
+    BKV, G, Cp, D = q4.shape
+    nb, b = k4.shape[1], k4.shape[2]
     B = counts2.shape[0]
-    gc = BQ // BKV       # G * C: query rows per KV row
-    hgc = BQ // B        # Hkv * G * C: query rows per batch row
-    qpos = qselok[:, :1]
-    selok = qselok[:, 1:]
+    hkv = BKV // B
+    rows = G * c_tile
 
     kernel = functools.partial(
         _chunk_kernel, scale=scale, block_size=b, m=m, quant=quant,
         include_bg=include_bg)
-    # ``quant`` is static: without scales the (1, 1, b) dummy tiles map to a
-    # constant block index, so they are DMA'd once and never re-fetched (the
-    # kernel body also statically skips them).
-    if quant:
-        scale_map = lambda r, i, ys, bl, so, qp: (r // gc, ys[r, i], 0)  # noqa: E731
-    else:
-        scale_map = lambda r, i, ys, bl, so, qp: (0, 0, 0)  # noqa: E731
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
-        grid=(BQ, m),
-        in_specs=[
-            pl.BlockSpec((1, D), lambda r, i, ys, bl, so, qp: (r, 0)),
-            pl.BlockSpec((1, 1, b, D),
-                         lambda r, i, ys, bl, so, qp: (r // gc, ys[r, i], 0, 0)),
-            pl.BlockSpec((1, 1, b, D),
-                         lambda r, i, ys, bl, so, qp: (r // gc, ys[r, i], 0, 0)),
-            pl.BlockSpec((1, 1, b), scale_map),
-            pl.BlockSpec((1, 1, b), scale_map),
-            pl.BlockSpec((1, nb), lambda r, i, ys, bl, so, qp: (r, 0)),
-            pl.BlockSpec((1, nb), lambda r, i, ys, bl, so, qp: (r // hgc, 0)),
-            pl.BlockSpec((1, nb), lambda r, i, ys, bl, so, qp: (r // hgc, 0)),
-            pl.BlockSpec((1, nb, D),
-                         lambda r, i, ys, bl, so, qp: (r // gc, 0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, D), lambda r, i, ys, bl, so, qp: (r, 0)),
-            pl.BlockSpec((1, 1), lambda r, i, ys, bl, so, qp: (r, 0)),
-            pl.BlockSpec((1, 1), lambda r, i, ys, bl, so, qp: (r, 0)),
-        ],
-    )
-    out, _, _ = pl.pallas_call(
+    grid = (BKV, Cp // c_tile)
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    out = pl.pallas_call(
         kernel,
-        grid_spec=grid_spec,
-        out_shape=(
-            jax.ShapeDtypeStruct((BQ, D), jnp.float32),
-            jax.ShapeDtypeStruct((BQ, 1), jnp.float32),
-            jax.ShapeDtypeStruct((BQ, 1), jnp.float32),
-        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, c_tile, D), lambda r, t: (r, 0, t, 0)),
+            pl.BlockSpec((1, G, c_tile, 1), lambda r, t: (r, 0, t, 0)),
+            pl.BlockSpec((1, nb, D), lambda r, t: (r, 0, 0)),
+            pl.BlockSpec((1, nb, D), lambda r, t: (r, 0, 0)),
+            pl.BlockSpec((1, nb), lambda r, t: (r // hkv, 0)),
+            pl.BlockSpec((1, nb), lambda r, t: (r // hkv, 0)),
+            any_spec,  # K pages: fetched by explicit per-page DMA
+            any_spec,
+            any_spec,
+            any_spec,
+        ],
+        out_specs=pl.BlockSpec((1, G, c_tile, D), lambda r, t: (r, 0, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((BKV, G, Cp, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((b, D), k4.dtype),
+            pltpu.VMEM((b, D), v4.dtype),
+            pltpu.VMEM((b, 1), jnp.float32),
+            pltpu.VMEM((b, 1), jnp.float32),
+            pltpu.SemaphoreType.DMA((4,)),
+            pltpu.VMEM((rows, D), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            # grid steps are fully independent (no cross-step accumulators),
+            # so the (batch·kv-head) axis may run on both megacore cores; the
+            # chunk-tile axis stays sequential to keep kds/vds tiles resident
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(ysel, blk, selok, qpos, q2, k4, v4, ks3, vs3, coarse2, counts2, pb2,
-      vds3)
+    )(q4, qpos4, kds3, vds3, counts2, pb2, k4, v4, ks4, vs4)
     return out
 
 
@@ -226,54 +296,66 @@ def chunk_attention_kernel(
     v_cache: jax.Array,
     q_pos: jax.Array,
     *,
+    m: int,
     k_scale=None,
     v_scale=None,
     include_bg: bool = True,
     interpret: bool = False,
+    mode: str = "auto",
 ) -> jax.Array:
-    """Fused chunk/decode attention from a selection prelude.
+    """Fused chunk/decode attention from the shared page-stats prelude.
 
-    ``pre`` is ``core.mra_decode.ChunkPrelude`` (coarse scores, top-m page
-    selection, page stats) — the jnp half shared bit-for-bit with the pure
-    path. Returns (B, Hq, C, D) fp32; the caller casts to q.dtype.
+    ``pre`` is ``core.mra_decode.ChunkPrelude`` (grouped queries + page
+    table/counts + k_ds/v_ds page means) — selection itself happens inside
+    the kernel. ``m`` is the static top-m budget, ``mode`` one of
+    ``{"auto", "latency", "throughput"}`` (see ``resolve_kernel_mode``).
+    Returns (B, Hq, C, D) fp32; the caller casts to q.dtype.
     """
     B, Hkv, G, C, D = pre.qg.shape
     S = k_cache.shape[2]
     b = pre.block_size
     nb = S // b
-    m = pre.y_idx.shape[-1]
-    BQ = B * Hkv * G * C
     BKV = B * Hkv
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError(
+            "k_scale and v_scale must be provided together (int8 cache), got "
+            f"k_scale={'set' if k_scale is not None else None} "
+            f"v_scale={'set' if v_scale is not None else None}")
+    if q_pos.shape != (B, C):
+        raise ValueError(
+            f"q_pos shape {q_pos.shape} does not match the (B, C) = "
+            f"({B}, {C}) of queries {pre.qg.shape}")
 
-    q2 = pre.qg.astype(jnp.float32).reshape(BQ, D)
+    c_tile = 1 if resolve_kernel_mode(mode, C) == "latency" \
+        else min(C, THROUGHPUT_C_TILE)
+    pad = (-C) % c_tile
+    Cp = C + pad
+
+    q4 = pre.qg.astype(jnp.float32).reshape(BKV, G, C, D)
+    qpos4 = jnp.broadcast_to(
+        q_pos[:, None, None, :], (B, Hkv, G, C)
+    ).astype(jnp.int32).reshape(BKV, G, C)[..., None]
+    if pad:  # ragged chunk boundary: padded rows select nothing, sliced off
+        q4 = jnp.pad(q4, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        qpos4 = jnp.pad(qpos4, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                        constant_values=-1)
+
     k4 = k_cache.reshape(BKV, nb, b, *k_cache.shape[3:])
     v4 = v_cache.reshape(BKV, nb, b, *v_cache.shape[3:])
     quant = k_scale is not None
     if quant:
-        ks3 = k_scale.astype(jnp.float32).reshape(BKV, nb, b)
-        vs3 = v_scale.astype(jnp.float32).reshape(BKV, nb, b)
-    else:  # one dummy tile keeps the arity static; constant index_map, no
-        # per-step DMA, and the kernel body statically skips it
-        ks3 = jnp.zeros((1, 1, b), jnp.float32)
-        vs3 = ks3
-    coarse2 = pre.coarse_m.astype(jnp.float32).reshape(BQ, nb)
+        ks4 = k_scale.astype(jnp.float32).reshape(BKV, nb, b)[..., None]
+        vs4 = v_scale.astype(jnp.float32).reshape(BKV, nb, b)[..., None]
+    else:  # dummy tiles keep the arity static; never DMA'd (static skip)
+        ks4 = jnp.zeros((1, 1, 1, 1), jnp.float32)
+        vs4 = ks4
+    kds3 = pre.k_ds.astype(jnp.float32).reshape(BKV, nb, D)
+    vds3 = pre.v_ds.astype(jnp.float32).reshape(BKV, nb, D)
     counts2 = pre.counts.astype(jnp.float32)
     pb2 = pre.pb.astype(jnp.int32)
-    vds3 = pre.v_ds.astype(jnp.float32).reshape(BKV, nb, D)
-
-    ysel = pre.y_idx.astype(jnp.int32).reshape(BQ, m)
-    # logical block of each selected physical page (positions mask)
-    blk = jnp.take_along_axis(
-        jnp.broadcast_to(pre.pb[:, None, None, None, :], (B, Hkv, G, C, nb)),
-        pre.y_idx, axis=-1).astype(jnp.int32).reshape(BQ, m)
-    selok = pre.sel_ok.astype(jnp.int32).reshape(BQ, m)
-    qpos = jnp.broadcast_to(
-        q_pos[:, None, None, :], (B, Hkv, G, C)).astype(jnp.int32)
-    qselok = jnp.concatenate([qpos.reshape(BQ, 1), selok], axis=1)
 
     out = _chunk_attention_call(
-        q2, k4, v4, ks3, vs3, coarse2, counts2, pb2, vds3,
-        ysel, blk, qselok,
-        pre.scale, b, m, quant, include_bg, interpret,
+        q4, qpos4, kds3, vds3, counts2, pb2, k4, v4, ks4, vs4,
+        pre.scale, b, m, c_tile, quant, include_bg, interpret,
     )
-    return out.reshape(B, Hkv * G, C, D)
+    return out[:, :, :C].reshape(B, Hkv * G, C, D)

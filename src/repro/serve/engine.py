@@ -77,6 +77,15 @@ class EngineConfig:
     mesh: jax device mesh for tensor-parallel serving (None = single device).
     default_sampling: sampler settings applied to requests submitted with
       ``sampling=None`` (None = greedy).
+    kernel_mode: fused-serving-kernel tile shape when ``cfg.attn_use_kernel``
+      (kernels/chunk_attn.py, DESIGN.md §11). "auto" (default) is the
+      per-dispatch pick: decode waves trace with C == 1 and run the
+      ``latency`` instantiation (single-query tiles, one wave per
+      batch·kv-head), while chunked prefill and speculative verify trace
+      with C == chunk / spec_k + 1 and run ``throughput`` (multi-query MXU
+      tiles). "latency" / "throughput" force one tile shape for every
+      dispatch — token streams are bit-identical in all three settings
+      (tests/test_chunk_kernel.py pins it); only the tiling changes.
     """
 
     slots: int = 4
@@ -85,6 +94,7 @@ class EngineConfig:
     spec_k: int = 0
     mesh: Optional[object] = None
     default_sampling: Optional[SamplingParams] = None
+    kernel_mode: str = "auto"
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -166,6 +176,15 @@ class Engine:
             config = dataclasses.replace(config or EngineConfig(), **kwargs)
         elif config is None:
             config = EngineConfig()
+        if config.kernel_mode not in ("auto", "latency", "throughput"):
+            raise ValueError(
+                "EngineConfig.kernel_mode must be 'auto' | 'latency' | "
+                f"'throughput', got {config.kernel_mode!r}")
+        if config.kernel_mode != "auto":
+            # forced mode rides the (frozen, hashable) ModelConfig into
+            # _make_engine_fns, so each forced mode compiles its own
+            # executables; "auto" resolves per entry point at trace time
+            cfg = cfg.replace(attn_kernel_mode=config.kernel_mode)
         self.config = config
         self.cfg = cfg
         self.model = get_model(cfg)

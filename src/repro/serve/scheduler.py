@@ -11,6 +11,14 @@ alignment. The scheduler only plans (which tokens go into the next prefill
 chunk, which slots decode); all device state lives in the engine's cache
 backend (serve/cache/) and all numerics in the jitted model functions, so
 planning order can never change a request's tokens (tests/test_engine.py).
+
+The plans double as the serving kernel's mode pick (DESIGN.md §11): a
+prefill plan feeds a C == chunk ``prefill_chunk`` dispatch (throughput-mode
+multi-query tiles under ``kernel_mode="auto"``), a decode mask feeds a
+C == 1 ``decode_step`` dispatch (latency-mode single-query tiles), and a
+speculative round's verify chunk is a C == spec_k + 1 prefill dispatch
+(throughput again) — the scheduler decides *which* dispatch shape runs,
+the trace-time chunk width resolves the tile shape.
 """
 from __future__ import annotations
 

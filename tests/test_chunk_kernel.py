@@ -68,10 +68,11 @@ SWEEP = [
 ]
 
 
-def _cfgs(case: Case):
+def _cfgs(case: Case, mode: str = "auto"):
     kw = dict(block_size=case.b, causal=True, variant=case.variant)
     return (MraConfig(**kw),
-            MraConfig(**kw, use_kernel=True, interpret=True))
+            MraConfig(**kw, use_kernel=True, interpret=True,
+                      kernel_mode=mode))
 
 
 def make_case_inputs(case: Case, *, C: int = 1, min_len: int = 0):
@@ -129,6 +130,98 @@ def test_kernel_matches_jnp(case: Case, mode: str):
         out = mra2_chunk_attention(q, k, v, lengths, q_pos, cfgk, **kw)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-5, rtol=1e-5)
+
+
+# a small cross-section of the sweep re-run with the mode *forced* (the main
+# sweep covers both instantiations through "auto": decode -> latency, chunk
+# -> throughput; this pins the off-diagonal pairings — latency tiling on
+# chunks, throughput tiling on single queries — without doubling wall time)
+FORCED = [Case(), Case(paged=True, quant=True, seed=21),
+          Case(ragged=True, group=2, seed=33),
+          Case(quant=True, variant="sparse", coarse_only=True, seed=40)]
+
+
+@pytest.mark.parametrize("case", FORCED, ids=lambda c: c.id)
+@pytest.mark.parametrize("mode", ["latency", "throughput"])
+@pytest.mark.parametrize("C", [1, 5])
+def test_kernel_forced_modes_match_jnp(case: Case, mode: str, C: int):
+    """Each forced tile shape == jnp at both a decode (C=1) and a *ragged*
+    chunk width (C=5: not a multiple of the throughput C_tile, so the padded
+    tail rows must select nothing and slice away cleanly)."""
+    q, k, v, lengths, q_pos, pb, ks, vs = make_case_inputs(case, C=C)
+    m = 1 if case.coarse_only else case.m
+    cfg, cfgk = _cfgs(case, mode)
+    kw = dict(decode_blocks=m, page_blocks=pb, k_scale=ks, v_scale=vs)
+    ref = mra2_chunk_attention(q, k, v, lengths, q_pos, cfg, **kw)
+    out = mra2_chunk_attention(q, k, v, lengths, q_pos, cfgk, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["latency", "throughput"])
+def test_kernel_oversubscribed_budget(mode: str):
+    """m > live blocks: the padded selection slots (top_k returns m indices
+    even when fewer pages are valid) must contribute nothing, in-kernel and
+    in jnp alike — budget == nb with mostly-dead rings."""
+    case = Case(m=4, seed=5)  # m == nb: every slot oversubscribed below
+    q, k, v, lengths, q_pos, pb, ks, vs = make_case_inputs(case, C=5)
+    lengths = jnp.asarray([1, 17], jnp.int32)  # 1 and 2 live blocks of 4
+    q_pos = jnp.maximum(lengths[:, None] - 5, 0) + jnp.arange(5)
+    cfg, cfgk = _cfgs(case, mode)
+    kw = dict(decode_blocks=case.m)
+    ref = mra2_chunk_attention(q, k, v, lengths, q_pos, cfg, **kw)
+    out = mra2_chunk_attention(q, k, v, lengths, q_pos, cfgk, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-5)
+    # and against the exact oracle where the contract holds (slot 1: full
+    # budget over its live prefix, C <= len): approximation == exact softmax
+    exact = full_chunk_attention(q, k, v, lengths, q_pos)
+    np.testing.assert_allclose(np.asarray(out)[1], np.asarray(exact)[1],
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("route", ["jnp", "latency", "throughput"])
+def test_fresh_slot_zero_live_query_block_is_zero(route: str):
+    """Regression (PR 7): a query whose block holds zero live tokens — a
+    fresh slot attending before any cache write lands — must produce exact
+    zeros. The old selection sentinel (``top_vals > NEG_INF * 0.5``) let the
+    FORCE_BONUS of the dead own block pass the threshold, so the row
+    attended stale cache garbage through the position mask."""
+    case = Case(seed=13)
+    q, k, v, _, _, _, _, _ = make_case_inputs(case, C=2)
+    lengths = jnp.asarray([0, 37], jnp.int32)
+    q_pos = jnp.asarray([[0, 1], [35, 36]], jnp.int32)  # slot 0: dead block
+    cfg, cfgk = _cfgs(case, route if route != "jnp" else "auto")
+    use = cfg if route == "jnp" else cfgk
+    out = np.asarray(mra2_chunk_attention(q, k, v, lengths, q_pos, use,
+                                          decode_blocks=case.m))
+    assert np.abs(out[0]).max() == 0.0  # exact zeros, not garbage
+    assert np.abs(out[1]).max() > 0.0  # the live slot still attends
+    if route != "jnp":  # and the routes agree on the live slot
+        ref = mra2_chunk_attention(q, k, v, lengths, q_pos, cfg,
+                                   decode_blocks=case.m)
+        np.testing.assert_allclose(out, np.asarray(ref), atol=2e-5, rtol=1e-5)
+
+
+def test_bad_shapes_raise_value_errors():
+    """Shape misuse fails with named shapes, not bare asserts (which vanish
+    under ``python -O``) — S % b, GQA grouping, q_pos, kernel_mode."""
+    case = Case()
+    q, k, v, lengths, q_pos, _, _, _ = make_case_inputs(case, C=1)
+    cfg, cfgk = _cfgs(case)
+    with pytest.raises(ValueError, match="multiple of block_size"):
+        mra2_chunk_attention(q, k[:, :, :60], v[:, :, :60], lengths, q_pos,
+                             cfg, decode_blocks=2)
+    with pytest.raises(ValueError, match="q_pos shape"):
+        mra2_chunk_attention(q, k, v, lengths, jnp.zeros((2, 3), jnp.int32),
+                             cfg, decode_blocks=2)
+    q3 = jnp.concatenate([q, q[:, :1]], axis=1)  # 3 query heads, 2 KV heads
+    with pytest.raises(ValueError, match="KV heads"):
+        mra2_chunk_attention(q3, k, v, lengths, q_pos, cfg, decode_blocks=2)
+    with pytest.raises(ValueError, match="kernel_mode"):
+        mra2_chunk_attention(q, k, v, lengths, q_pos,
+                             dataclasses.replace(cfgk, kernel_mode="warp"),
+                             decode_blocks=2)
 
 
 def test_kernel_full_budget_equals_exact_oracle():
@@ -232,30 +325,46 @@ def _engine_requests():
 
 def test_engine_kernel_path_matches_jnp_engine():
     """Ragged continuous batching through the fused kernel emits identical
-    token streams (chunked prefill + decode waves both route through it)."""
+    token streams (chunked prefill + decode waves both route through it) —
+    under the per-dispatch "auto" mode pick AND with either tile shape
+    forced via EngineConfig.kernel_mode (DESIGN.md §11 dual-mode contract)."""
     from repro.configs import get_smoke_config
     from repro.models import get_model, init_params
-    from repro.serve import Engine
+    from repro.serve import Engine, EngineConfig
 
     cfg = get_smoke_config("qwen3-1.7b")
     params = init_params(get_model(cfg).param_specs(cfg), jax.random.PRNGKey(0))
-    ref = Engine(cfg, params, slots=3, max_len=64, chunk=8).run(
-        _engine_requests())
-    kcfg = cfg.replace(attn_use_kernel=True, attn_interpret=True)
-    got = Engine(kcfg, params, slots=3, max_len=64, chunk=8).run(
-        _engine_requests())
+    ecfg = EngineConfig(slots=3, max_len=64, chunk=8)
+    ref = Engine(cfg, params, ecfg).run(_engine_requests())
     by = {len(r.prompt): r.out for r in ref}
-    for r in got:
-        np.testing.assert_array_equal(r.out, by[len(r.prompt)])
+    kcfg = cfg.replace(attn_use_kernel=True, attn_interpret=True)
+    for mode in ("auto", "latency", "throughput"):
+        got = Engine(kcfg, params, ecfg.replace(kernel_mode=mode)).run(
+            _engine_requests())
+        for r in got:
+            np.testing.assert_array_equal(r.out, by[len(r.prompt)],
+                                          err_msg=f"kernel_mode={mode}")
+
+
+def test_engine_rejects_unknown_kernel_mode():
+    from repro.configs import get_smoke_config
+    from repro.models import get_model, init_params
+    from repro.serve import Engine, EngineConfig
+
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = init_params(get_model(cfg).param_specs(cfg), jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="kernel_mode"):
+        Engine(cfg, params, EngineConfig(slots=1, kernel_mode="fast"))
 
 
 def test_engine_kernel_path_speculative_matches_jnp_engine():
     """Speculative serving through the kernel: the coarse-only draft steps,
     the chunked verify dispatch, and ring eviction all hit the fused path
-    and still emit the jnp engine's exact tokens (DESIGN.md §10 + §11)."""
+    and still emit the jnp engine's exact tokens (DESIGN.md §10 + §11) —
+    in the "auto" per-dispatch pick and with either tile shape forced."""
     from repro.configs import get_smoke_config
     from repro.models import get_model, init_params
-    from repro.serve import Engine, Request
+    from repro.serve import Engine, EngineConfig, Request
 
     cfg = get_smoke_config("qwen3-1.7b")
     params = init_params(get_model(cfg).param_specs(cfg), jax.random.PRNGKey(0))
@@ -264,11 +373,14 @@ def test_engine_kernel_path_speculative_matches_jnp_engine():
         return [Request(prompt=np.arange(1, 9), max_new_tokens=20),  # evicts
                 Request(prompt=np.array([5, 11, 2]), max_new_tokens=6)]
 
-    ref = Engine(cfg, params, slots=2, max_len=32, chunk=8, spec_k=3).run(reqs())
-    kcfg = cfg.replace(attn_use_kernel=True, attn_interpret=True)
-    eng = Engine(kcfg, params, slots=2, max_len=32, chunk=8, spec_k=3)
-    got = eng.run(reqs())
+    ecfg = EngineConfig(slots=2, max_len=32, chunk=8, spec_k=3)
+    ref = Engine(cfg, params, ecfg).run(reqs())
     by = {len(r.prompt): r.out for r in ref}
-    for r in got:
-        np.testing.assert_array_equal(r.out, by[len(r.prompt)])
-    assert eng.stats["spec_rounds"] > 0
+    kcfg = cfg.replace(attn_use_kernel=True, attn_interpret=True)
+    for mode in ("auto", "latency", "throughput"):
+        eng = Engine(kcfg, params, ecfg.replace(kernel_mode=mode))
+        got = eng.run(reqs())
+        for r in got:
+            np.testing.assert_array_equal(r.out, by[len(r.prompt)],
+                                          err_msg=f"kernel_mode={mode}")
+        assert eng.stats["spec_rounds"] > 0

@@ -125,9 +125,12 @@ def test_train_step_parity(use_kernel):
 def test_decode_chunk_kernel_parity():
     """The fused Pallas serving kernel (kernels/chunk_attn.py, interpret
     mode) under the DP=2 x TP=4 shard_map == single device — decode and
-    chunked prefill, paged ring table and int8 scales riding along
-    (DESIGN.md §11: the per-shard pallas_call sees only its own (batch,
-    kv-head) slice; page tables and q_pos shard over batch)."""
+    chunked prefill, paged ring table and int8 scales riding along, in
+    both kernel modes (DESIGN.md §11: the per-shard pallas_call sees only
+    its own (batch, kv-head) slice; page tables, q_pos, and the in-kernel
+    selection shard over batch; ``kernel_mode`` travels inside the spec
+    dataclass, so latency and throughput tiling both work unchanged
+    under DP x TP)."""
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.core.attention import AttentionSpec, chunk_attention, \\
@@ -151,29 +154,31 @@ def test_decode_chunk_kernel_parity():
         pb = pb.at[:2].set(jnp.roll(pb[:2] + nb // 2, nb // 2, axis=1))
         kq, ks = quantize_kv(k)
         vq, vs = quantize_kv(v)
-        spec = AttentionSpec(kind="mra2", block_size=b, decode_blocks=2,
-                             use_kernel=True, interpret=True)
         mesh = make_local_mesh(2, 4)
 
-        ref = jax.jit(lambda q: chunk_attention(q, k, v, lengths, q_pos,
-                                                spec))(q)
-        with mesh_utils.use_mesh(mesh):
-            got = jax.jit(lambda q: chunk_attention(
-                q, k, v, lengths, q_pos, spec.replace(shard=True)))(q)
-        cerr = float(jnp.abs(ref - got).max())
-        ref = jax.jit(lambda q: decode_attention(
-            q, kq, vq, lengths_ring, spec, page_blocks=pb, k_scale=ks,
-            v_scale=vs))(q1)
-        with mesh_utils.use_mesh(mesh):
-            got = jax.jit(lambda q: decode_attention(
-                q, kq, vq, lengths_ring, spec.replace(shard=True),
-                page_blocks=pb, k_scale=ks, v_scale=vs))(q1)
-        derr = float(jnp.abs(ref - got).max())
-        assert cerr < 1e-5, cerr
-        assert derr < 1e-5, derr
-        print("OK", cerr, derr)
+        for mode in ("latency", "throughput"):
+            spec = AttentionSpec(kind="mra2", block_size=b, decode_blocks=2,
+                                 use_kernel=True, interpret=True,
+                                 kernel_mode=mode)
+            ref = jax.jit(lambda q: chunk_attention(q, k, v, lengths, q_pos,
+                                                    spec))(q)
+            with mesh_utils.use_mesh(mesh):
+                got = jax.jit(lambda q: chunk_attention(
+                    q, k, v, lengths, q_pos, spec.replace(shard=True)))(q)
+            cerr = float(jnp.abs(ref - got).max())
+            ref = jax.jit(lambda q: decode_attention(
+                q, kq, vq, lengths_ring, spec, page_blocks=pb, k_scale=ks,
+                v_scale=vs))(q1)
+            with mesh_utils.use_mesh(mesh):
+                got = jax.jit(lambda q: decode_attention(
+                    q, kq, vq, lengths_ring, spec.replace(shard=True),
+                    page_blocks=pb, k_scale=ks, v_scale=vs))(q1)
+            derr = float(jnp.abs(ref - got).max())
+            assert cerr < 1e-5, (mode, cerr)
+            assert derr < 1e-5, (mode, derr)
+            print("OK", mode, cerr, derr)
     """)
-    assert "OK" in out
+    assert out.count("OK") == 2
 
 
 def test_serve_step_parity():
