@@ -41,6 +41,21 @@ MODULES = (
     "spec_bench",
 )
 
+# row-presence schema: beyond the per-suite "emitted anything at all" check,
+# these named rows are load-bearing for the BENCH_*.json trajectory (the
+# telemetry acceptance rows, DESIGN.md §13) — a refactor that silently stops
+# emitting one must fail the run, not ship a quietly thinner artifact
+REQUIRED_ROWS = {
+    "serve_bench": (
+        "serve_ttft_p50",
+        "serve_ttft_p99",
+        "serve_telemetry_overhead_ratio",
+        "serve_cache_occupancy",
+        "serve_spec_accept_per_slot",
+    ),
+    "spec_bench": ("spec_base_tok_per_dispatch",),
+}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -51,6 +66,9 @@ def main() -> None:
                     help="device mesh 'D' or 'DxM' (default: 1 = no mesh)")
     ap.add_argument("--json", default=None,
                     help="also write results to this JSON file (CI artifact)")
+    ap.add_argument("--trace", default=None,
+                    help="request-lifecycle trace JSONL output path, passed "
+                         "to suites that accept trace_path (serve_bench)")
     args = ap.parse_args()
 
     if args.list:
@@ -82,9 +100,16 @@ def main() -> None:
                          "derived": str(derived), "suite": suite})
         return emit
 
+    import inspect
+
     with mesh_utils.use_mesh(mesh):
         for name in chosen:
-            modules[name].run(make_emit(name))
+            kwargs = {}
+            if (args.trace
+                    and "trace_path" in
+                    inspect.signature(modules[name].run).parameters):
+                kwargs["trace_path"] = args.trace
+            modules[name].run(make_emit(name), **kwargs)
 
     # schema check: every chosen suite must have emitted at least one row.
     # A partial artifact (a module silently contributing nothing — e.g. an
@@ -93,6 +118,13 @@ def main() -> None:
     empty = [n for n in chosen if not any(r["suite"] == n for r in rows)]
     if empty:
         sys.exit(f"[bench] FATAL: suites emitted zero rows: {empty} — "
+                 "refusing to produce a partial artifact")
+    names = {r["name"] for r in rows}
+    missing = [f"{suite}:{row}" for suite in chosen
+               for row in REQUIRED_ROWS.get(suite, ())
+               if row not in names]
+    if missing:
+        sys.exit(f"[bench] FATAL: required rows missing: {missing} — "
                  "refusing to produce a partial artifact")
 
     if args.json:

@@ -17,6 +17,14 @@ Also serves the recurrent/hybrid families (rwkv6, recurrentgemma) through
 the same engine via the per-layer cache protocol (DESIGN.md §12), reporting
 req/s, tok/s, and the chunked-recurrent-prefill dispatch ratio vs. token
 replay (acceptance: >= 5x).
+
+Telemetry rows (DESIGN.md §13): TTFT p50/p99 and queue-wait from the
+request-lifecycle histograms, cache-occupancy peaks for all three cache
+families, per-slot speculative acceptance, and the pinned no-op-path
+overhead claim — telemetry-on vs telemetry-off tok/s ratio >= 0.95 with
+bit-identical token streams. ``--trace out.jsonl`` (or ``benchmarks.run
+--trace``) exports the speculative engine's Chrome-trace JSONL as the CI
+artifact.
 """
 from __future__ import annotations
 
@@ -29,6 +37,7 @@ from repro.configs import get_smoke_config
 from repro.distributed import mesh_utils
 from repro.models import get_model, init_params
 from repro.serve import Engine, EngineConfig, Request, SamplingParams
+from repro.serve.telemetry import load_trace_jsonl, validate_chrome_events
 
 
 def _requests(rng, vocab, lens, new_tokens):
@@ -41,7 +50,7 @@ def _requests(rng, vocab, lens, new_tokens):
     return reqs
 
 
-def run(emit):
+def run(emit, trace_path=None):
     mesh = mesh_utils.get_mesh()
     cfg = get_smoke_config("qwen3-1.7b")
     cfg = cfg.replace(attn_shard=mesh is not None)
@@ -52,6 +61,7 @@ def run(emit):
 
     # prompt-length mix: short chat-style + long document-style
     mixes = {"short": [8, 12, 5, 9, 14, 7], "mixed": [8, 128, 24, 96, 12, 64]}
+    ttft_all, queue_all = [], []
     for slots in (2, 4):
         for mix_name, lens in mixes.items():
             eng = Engine(cfg, params, EngineConfig(
@@ -64,15 +74,68 @@ def run(emit):
             dt = time.perf_counter() - t0
             assert len(done) == len(reqs)
             gen = eng.stats["generated_tokens"]
-            steps = sorted(eng.stats["decode_step_seconds"])
-            p50 = steps[len(steps) // 2] if steps else 0.0
-            p99 = steps[min(len(steps) - 1, int(len(steps) * 0.99))] if steps else 0.0
+            snap = eng.telemetry.snapshot()
+            itl = snap["histograms"]["decode_step_seconds"]
             name = f"serve_s{slots}_{mix_name}"
             emit(f"{name}_req_per_s", dt / max(len(reqs), 1) * 1e6,
                  f"{len(reqs) / dt:.2f}")
             emit(f"{name}_tok_per_s", dt / max(gen, 1) * 1e6, f"{gen / dt:.1f}")
-            emit(f"{name}_itl_p50", p50 * 1e6, f"{p50 * 1e3:.2f}ms")
-            emit(f"{name}_itl_p99", p99 * 1e6, f"{p99 * 1e3:.2f}ms")
+            emit(f"{name}_itl_p50", itl["p50"] * 1e6,
+                 f"{itl['p50'] * 1e3:.2f}ms")
+            emit(f"{name}_itl_p99", itl["p99"] * 1e6,
+                 f"{itl['p99'] * 1e3:.2f}ms")
+            ttft_all += eng.stats["ttft_seconds"]
+            queue_all += eng.stats["queue_wait_seconds"]
+
+    # request-lifecycle telemetry across the slot/mix sweep (DESIGN.md §13):
+    # TTFT = submit -> first token, decomposable into queue + prefill via the
+    # queue_wait/prefill histograms the same snapshot carries
+    def pct(xs, q):
+        xs = sorted(xs)
+        return xs[min(len(xs) - 1, int(len(xs) * q))] if xs else 0.0
+
+    ttft_p50, ttft_p99 = pct(ttft_all, 0.5), pct(ttft_all, 0.99)
+    emit("serve_ttft_p50", ttft_p50 * 1e6, f"{ttft_p50 * 1e3:.2f}ms")
+    emit("serve_ttft_p99", ttft_p99 * 1e6, f"{ttft_p99 * 1e3:.2f}ms")
+    emit("serve_queue_wait_p50", pct(queue_all, 0.5) * 1e6,
+         f"{pct(queue_all, 0.5) * 1e3:.2f}ms")
+    assert len(ttft_all) >= 4 * len(mixes["short"]) - 4, len(ttft_all)
+    # ring-paged cache occupancy peaks from the last (s4, mixed) run
+    g = snap["gauges"]
+    emit("serve_cache_occupancy", dt * 1e6,
+         f"pages_live_peak={g['cache_pages_live']['peak']:.0f} "
+         f"tokens_live_peak={g['cache_tokens_live']['peak']:.0f} "
+         f"evicted_peak={g['cache_tokens_evicted']['peak']:.0f}")
+    assert g["cache_pages_live"]["peak"] > 0
+
+    # no-op fast path (DESIGN.md §13): telemetry must be a pure observer —
+    # token streams bit-identical with it on or off, and the enabled path's
+    # throughput within a few percent. Best-of-3 guards CPU timer noise.
+    def overhead_leg(telemetry_on):
+        eng = Engine(cfg, params, EngineConfig(
+            slots=4, max_len=256, chunk=chunk, mesh=mesh,
+            telemetry=telemetry_on))
+        mk = lambda: _requests(np.random.default_rng(7), cfg.vocab,
+                               mixes["short"], new_tokens)  # noqa: E731
+        eng.run(mk()[:1])  # warmup: compile prefill + decode + sample
+        best_tps, done = 0.0, None
+        for _ in range(3):
+            reqs = mk()
+            t0 = time.perf_counter()
+            done = eng.run(reqs)
+            dt_leg = time.perf_counter() - t0
+            gen_leg = sum(len(r.out) for r in done)
+            best_tps = max(best_tps, gen_leg / dt_leg)
+        return best_tps, {len(r.prompt): r.out for r in done}
+
+    off_tps, off_out = overhead_leg(False)
+    on_tps, on_out = overhead_leg(True)
+    match = all(np.array_equal(on_out[k], off_out[k]) for k in off_out)
+    ratio = on_tps / off_tps
+    emit("serve_telemetry_overhead_ratio", 1e6 / max(on_tps, 1e-9),
+         f"{ratio:.3f} tokens_match={match}")
+    assert match, "telemetry changed the token stream"
+    assert ratio >= 0.95, (on_tps, off_tps)
 
     # dispatch economy: one 128-token prompt through chunked prefill vs. the
     # token-replay baseline (= prompt_len decode dispatches, the pre-§9 engine)
@@ -133,6 +196,33 @@ def run(emit):
              f"{gen / dt:.1f} tokens_match={match}")
         assert match, mode
 
+    # resolution-speculative engine telemetry (DESIGN.md §10/§13): per-slot
+    # acceptance series land in the snapshot, and this engine's trace — the
+    # richest lifecycle (queued/prefill/decode spans + draft/verify
+    # dispatches) — is the exported Chrome-trace JSONL artifact.
+    seng = Engine(cfg, params, EngineConfig(
+        slots=2, max_len=64, chunk=8, spec_k=2, mesh=mesh))
+    sreqs = [Request(prompt=rng.integers(1, cfg.vocab, size=ln),
+                     max_new_tokens=12) for ln in (19, 7, 11, 5)]
+    seng.run([Request(prompt=rng.integers(1, cfg.vocab, size=6),
+                      max_new_tokens=4)])  # warmup
+    seng.reset_stats()
+    t0 = time.perf_counter()
+    sdone = seng.run(sreqs)
+    dt = time.perf_counter() - t0
+    assert len(sdone) == len(sreqs)
+    snap = seng.telemetry.snapshot()
+    series = snap["series"]["spec_accept_by_slot"]
+    per_slot = " ".join(
+        f"slot{k}={np.mean(v):.2f}/round" for k, v in sorted(series.items()))
+    emit("serve_spec_accept_per_slot", dt * 1e6, per_slot or "none")
+    assert series, "speculative run recorded no per-slot acceptance"
+    if trace_path:
+        n = seng.telemetry.trace.export_jsonl(trace_path)
+        validate_chrome_events(load_trace_jsonl(trace_path))
+        emit("serve_trace_events", dt * 1e6,
+             f"{n} events -> {trace_path} (validated)")
+
     # recurrent/hybrid families through the same engine (DESIGN.md §12):
     # rwkv6's O(1) wkv state and recurrentgemma's RG-LRU + window ring serve
     # under identical continuous batching; the dispatch-economy claim is the
@@ -164,6 +254,15 @@ def run(emit):
              f"{pre_disp} dispatches for {pre_tok} tokens "
              f"({ratio:.0f}x fewer than replay)")
         assert ratio >= 5.0, (pre_disp, pre_tok)
+        # state/window cache occupancy (DESIGN.md §13): recurrent state
+        # absorbs history (evicted stays 0); the hybrid window ring holds
+        # min(L, W) entries and counts older positions as evicted
+        g = eng.telemetry.snapshot()["gauges"]
+        emit(f"serve_{tag}_cache_occupancy", dt * 1e6,
+             f"tokens_live_peak={g['cache_tokens_live']['peak']:.0f} "
+             f"pages_live_peak={g['cache_pages_live']['peak']:.0f} "
+             f"evicted_peak={g['cache_tokens_evicted']['peak']:.0f}")
+        assert g["cache_tokens_live"]["peak"] > 0
 
 
 def main() -> None:
@@ -173,6 +272,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="1",
                     help="device mesh 'D' or 'DxM' (default: 1 = no mesh)")
+    ap.add_argument("--trace", default=None,
+                    help="export the speculative engine's request/dispatch "
+                         "trace as Chrome-trace JSONL to this path")
     args = ap.parse_args()
 
     from repro.launch.mesh import parse_mesh
@@ -184,7 +286,7 @@ def main() -> None:
         sys.stdout.flush()
 
     with mesh_utils.use_mesh(parse_mesh(args.mesh)):
-        run(emit)
+        run(emit, trace_path=args.trace)
 
 
 if __name__ == "__main__":

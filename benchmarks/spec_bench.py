@@ -97,6 +97,14 @@ def run(emit, ks=(2, 4), assert_claim=True):
         gain = per_dispatch / base_per_dispatch
         emit(f"spec_k{k}_accept_rate", dt / max(gen, 1) * 1e6,
              f"{accept_rate:.3f}")
+        # per-slot acceptance series (serve/telemetry.py, DESIGN.md §13) —
+        # the signal the adaptive-K arc tunes from: mean accepted drafts
+        # per round for each scheduler slot
+        series = eng.telemetry.snapshot()["series"]["spec_accept_by_slot"]
+        emit(f"spec_k{k}_accept_per_slot", dt / max(gen, 1) * 1e6,
+             " ".join(f"slot{s}={np.mean(v):.2f}/round"
+                      for s, v in sorted(series.items())))
+        assert series, "speculative engine recorded no per-slot acceptance"
         emit(f"spec_k{k}_tok_per_dispatch", dt / max(gen, 1) * 1e6,
              f"{per_dispatch:.2f}")
         emit(f"spec_k{k}_dispatch_gain_vs_base", dt / max(gen, 1) * 1e6,

@@ -54,9 +54,26 @@ def main():
                     help="route MRA chunk/decode attention through the fused "
                          "Pallas serving kernel (DESIGN.md §11; interpret "
                          "mode off-TPU — slow on CPU, same tokens)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export the serving engine's request-lifecycle + "
+                         "dispatch trace as Chrome-trace JSONL (load in "
+                         "chrome://tracing or Perfetto; DESIGN.md §13)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the engine's Prometheus-format telemetry "
+                         "snapshot (TTFT/inter-token/queue histograms, "
+                         "dispatch counters, occupancy gauges) after the run")
     args = ap.parse_args()
     from repro.launch.mesh import parse_mesh
     mesh = parse_mesh(args.mesh)
+
+    def dump_telemetry(eng):
+        """Export the engine's observability surfaces (DESIGN.md §13)."""
+        if args.metrics:
+            print(eng.telemetry.prometheus_text(), end="")
+        if args.trace:
+            n = eng.telemetry.trace.export_jsonl(args.trace)
+            print(f"wrote {n} Chrome-trace events to {args.trace} "
+                  "(open in chrome://tracing or ui.perfetto.dev)")
 
     def make_requests(cfg):
         rng = np.random.default_rng(0)
@@ -89,6 +106,7 @@ def main():
               f"{eng.stats['decode_dispatches']} decode dispatches):")
         for r in done:
             print(f"  req ({len(r.prompt)} prompt toks) -> {r.out.tolist()}")
+        dump_telemetry(eng)
         return
 
     outs = {}
@@ -130,6 +148,10 @@ def main():
               f"{spec_note}):")
         for r in done:
             print(f"  req ({len(r.prompt)} prompt toks) -> {r.out.tolist()}")
+        if kind.startswith("mra"):
+            # the MRA engine (speculative when --spec-k) is the interesting
+            # trace; the exact-attention reference is just the oracle
+            dump_telemetry(eng)
 
     keys = sorted(outs["full"])
     agree = sum(int(outs["mra2"][k] == outs["full"][k]) for k in keys)

@@ -38,6 +38,10 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 case "${1:-fast}" in
   fast)
     python -m pytest -x -q                       # pytest.ini deselects slow+shard
+    # telemetry smoke (DESIGN.md §13): metrics snapshot round-trips through
+    # JSON, reservoirs stay bounded, trace events validate as Chrome-trace
+    # (imported form avoids runpy's found-in-sys.modules warning)
+    python -c "from repro.serve import telemetry; telemetry._selftest()"
     # speculative-decoding smoke (DESIGN.md §10): K=2, tiny model, jnp paths
     # (kernels stay in interpret-capable territory on the decode side)
     python -m benchmarks.spec_bench --smoke

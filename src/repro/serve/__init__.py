@@ -4,12 +4,14 @@ from .engine import Engine, EngineConfig
 from .sampling import SamplingParams, sample, sample_batch
 from .scheduler import Request, Scheduler, SlotState
 from .speculative import SpecDecoder
+from .telemetry import MetricsRegistry, Telemetry, UndeclaredMetric
 
 __all__ = [
     "CacheBackend",
     "Engine",
     "EngineConfig",
     "HybridWindowCache",
+    "MetricsRegistry",
     "RecurrentStateCache",
     "Request",
     "RingPagedKVCache",
@@ -17,6 +19,8 @@ __all__ = [
     "Scheduler",
     "SlotState",
     "SpecDecoder",
+    "Telemetry",
+    "UndeclaredMetric",
     "make_cache",
     "sample",
     "sample_batch",

@@ -236,6 +236,28 @@ class RingPagedKVCache(CacheBackend):
     def lengths(self) -> np.ndarray:
         return np.asarray(self.tree["lengths"])
 
+    def occupancy(self) -> dict:
+        """Occupancy gauges (DESIGN.md §13): live tokens/pages + evictions.
+
+        ``tokens_live`` counts positions still attendable (the window from
+        the oldest live page to the stream head), ``pages_live`` the
+        non-evicted page-table entries, ``tokens_evicted`` the positions
+        ring eviction has dropped. Dense (non-paged) storage never evicts.
+        """
+        lengths = self.lengths
+        occ = {
+            "slots_active": float((lengths > 0).sum()),
+            "tokens_live": float(lengths.sum()),
+            "pages_live": 0.0,
+            "tokens_evicted": 0.0,
+        }
+        if self.paged:
+            start = self.window_start()
+            occ["tokens_live"] = float((lengths - start).sum())
+            occ["pages_live"] = float(self.live_pages().sum())
+            occ["tokens_evicted"] = float(start.sum())
+        return occ
+
     def live_pages(self) -> Optional[np.ndarray]:
         """(B,) live (non-evicted) page count per slot; None when dense."""
         if not self.paged:

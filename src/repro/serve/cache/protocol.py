@@ -55,6 +55,23 @@ class CacheBackend:
     def lengths(self) -> np.ndarray:
         return np.asarray(self.tree["lengths"])
 
+    def occupancy(self) -> dict:
+        """Uniform occupancy gauges (serve/telemetry.py, DESIGN.md §13).
+
+        Keys every backend reports: ``slots_active`` (slots with a live
+        stream), ``tokens_live`` (tokens the cache still conditions on),
+        ``pages_live`` (occupied page/ring entries; 0 for pure state
+        caches), ``tokens_evicted`` (tokens no longer attendable — ring
+        evictions; 0 where state absorbs history instead of evicting it).
+        """
+        lengths = self.lengths
+        return {
+            "slots_active": float((lengths > 0).sum()),
+            "tokens_live": float(lengths.sum()),
+            "pages_live": 0.0,
+            "tokens_evicted": 0.0,
+        }
+
     # speculative decoding is a paged-backend feature (DESIGN.md §10/§12)
     def spec_snapshot(self, window: int):
         raise NotImplementedError(

@@ -23,4 +23,10 @@ __all__ = ["RecurrentStateCache"]
 
 
 class RecurrentStateCache(StateCache):
-    """Fixed-size wkv state per slot; lifecycle shared with StateCache."""
+    """Fixed-size wkv state per slot; lifecycle shared with StateCache.
+
+    Occupancy telemetry (DESIGN.md §13) uses the protocol default: the wkv
+    state *absorbs* history instead of paging it, so ``tokens_live`` is the
+    total absorbed stream and ``pages_live`` / ``tokens_evicted`` stay 0 —
+    nothing is ever dropped from a recurrent state.
+    """

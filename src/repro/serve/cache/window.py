@@ -18,6 +18,8 @@ its chunk size accordingly.
 """
 from __future__ import annotations
 
+import numpy as np
+
 from .protocol import StateCache
 
 __all__ = ["HybridWindowCache"]
@@ -29,3 +31,19 @@ class HybridWindowCache(StateCache):
     def __init__(self, cfg, model, slots: int, max_len: int, mesh=None):
         super().__init__(cfg, model, slots, max_len, mesh=mesh)
         self.chunk_cap = min(cfg.local_window, max_len)
+
+    def occupancy(self) -> dict:
+        """Occupancy gauges (DESIGN.md §13): the window ring holds the last
+        ``W = chunk_cap`` tokens per slot, so ring entries = min(L, W) and
+        positions older than the window count as evicted (the RG-LRU state
+        still carries them, but the local-attention layers cannot see
+        them)."""
+        lengths = self.lengths
+        w = self.chunk_cap
+        held = np.minimum(lengths, w)
+        return {
+            "slots_active": float((lengths > 0).sum()),
+            "tokens_live": float(held.sum()),
+            "pages_live": float(held.sum()),
+            "tokens_evicted": float(np.maximum(lengths - w, 0).sum()),
+        }

@@ -30,15 +30,21 @@ Per engine iteration:
 Slots never wait for each other: a slot can decode while its neighbor is
 mid-prefill, and finished slots readmit immediately. With ``mesh`` set the
 engine serves tensor-parallel (params/cache placed by ParamSpec axes;
-attention through shard_map when ``cfg.attn_shard``). ``Engine.stats``
-counts jitted dispatches and per-step latencies for benchmarks/serve_bench.
+attention through shard_map when ``cfg.attn_shard``).
+
+Observability (serve/telemetry.py, DESIGN.md §13): every engine owns a
+``Telemetry`` whose metric set is declared in ``reset_stats`` — typed
+counters for dispatches/tokens, bounded histograms for prefill-chunk /
+decode-step / draft / verify wall time and the request-derived TTFT /
+queue-wait / inter-token latencies, gauges for scheduler slot occupancy and
+cache page/eviction occupancy, and a Chrome-trace request lifecycle.
+``Engine.stats`` survives as a typed view over the registry (undeclared
+keys raise). ``EngineConfig(telemetry=False)`` is the pinned no-op path.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
-import time
 import warnings
 from typing import List, Optional
 
@@ -52,7 +58,8 @@ from repro.models import get_model
 
 from .cache import make_cache
 from .sampling import SamplingParams, greedy_batch, sample_batch
-from .scheduler import Request, Scheduler
+from .scheduler import Request, Scheduler, SlotState
+from .telemetry import StatsView, Telemetry
 
 __all__ = ["Engine", "EngineConfig", "Request", "SamplingParams"]
 
@@ -86,6 +93,12 @@ class EngineConfig:
       tiles). "latency" / "throughput" force one tile shape for every
       dispatch — token streams are bit-identical in all three settings
       (tests/test_chunk_kernel.py pins it); only the tiling changes.
+    telemetry: enable the full observability path — request-lifecycle
+      tracing, latency histograms, occupancy gauges, profiler annotations
+      (serve/telemetry.py, DESIGN.md §13). ``False`` is the no-op fast
+      path: only the plain dispatch/token counters keep counting; token
+      streams are bit-identical either way and serve_bench pins the
+      enabled-path overhead at tok/s ratio >= 0.95.
     """
 
     slots: int = 4
@@ -95,6 +108,7 @@ class EngineConfig:
     mesh: Optional[object] = None
     default_sampling: Optional[SamplingParams] = None
     kernel_mode: str = "auto"
+    telemetry: bool = True
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -117,13 +131,19 @@ def _make_engine_fns(cfg: ModelConfig):
             f"family {cfg.family!r} does not implement the serving contract "
             f"(missing {missing}; see models/registry.py)")
 
+    # trace-time profiler annotations (zero runtime cost): device profiles
+    # group each serving entry point by family + kernel mode (DESIGN.md §13)
+    scope = f"serve.{cfg.family}.{cfg.attn_kernel_mode}"
+
     def prefill_chunk(params, cache, tokens, num_valid):
-        return model.prefill_chunk(params, cfg, cache, tokens, num_valid)
+        with jax.named_scope(f"{scope}.prefill_chunk"):
+            return model.prefill_chunk(params, cfg, cache, tokens, num_valid)
 
     def decode_and_sample(params, cache, tokens, active, any_sampling, temp,
                           top_k, top_p, seed, step):
-        logits, cache = model.decode_step(params, cfg, cache, tokens,
-                                          active=active)
+        with jax.named_scope(f"{scope}.decode_step"):
+            logits, cache = model.decode_step(params, cfg, cache, tokens,
+                                              active=active)
         # all-greedy batches (the common case) skip the sort/softmax/cumsum
         # sampling pipeline entirely; greedy_batch is sample_batch's own
         # temperature == 0 path, so the token is identical either way
@@ -222,23 +242,49 @@ class Engine:
         self.reset_stats()
 
     def reset_stats(self) -> None:
-        """Zero the dispatch/latency counters (e.g. after jit warmup)."""
-        self.stats = {
-            "prefill_dispatches": 0,
-            "decode_dispatches": 0,
-            "prefill_tokens": 0,
-            "generated_tokens": 0,
-            "requests_completed": 0,
+        """Re-declare the engine's full metric set, zeroed (DESIGN.md §13).
+
+        This is the *only* place serving metrics come into existence: every
+        counter any component ever writes — the engine's own dispatch/token
+        counters AND the speculative keys SpecDecoder increments
+        (``draft_dispatches``, ``spec_rounds``, …) — is declared here, so a
+        write to an undeclared name raises ``UndeclaredMetric`` at the
+        write site instead of silently minting a new key.
+        """
+        tel = Telemetry(enabled=self.config.telemetry, tags={
+            "family": self.cfg.family,
+            "cache": type(self.kv).__name__,
+            "kernel_mode": self.config.kernel_mode,
+        })
+        m = tel.metrics
+        m.declare_counter(
+            "prefill_dispatches", "decode_dispatches", "prefill_tokens",
+            "generated_tokens", "requests_completed",
             # speculative decoding (spec_k > 0; serve/speculative.py)
-            "spec_rounds": 0,
-            "draft_dispatches": 0,
-            "verify_dispatches": 0,
-            "spec_drafted_tokens": 0,
-            "spec_accepted_tokens": 0,
-            "spec_emitted_tokens": 0,
-            # bounded: a long-lived engine must not grow host memory per step
-            "decode_step_seconds": collections.deque(maxlen=4096),
-        }
+            "spec_rounds", "draft_dispatches", "verify_dispatches",
+            "spec_drafted_tokens", "spec_accepted_tokens",
+            "spec_emitted_tokens")
+        # dispatch wall time + request-derived latencies; bounded reservoirs
+        # (a long-lived engine must not grow host memory per step)
+        m.declare_histogram(
+            "decode_step_seconds", "prefill_chunk_seconds", "draft_seconds",
+            "verify_seconds", "ttft_seconds", "queue_wait_seconds",
+            "prefill_seconds", "inter_token_seconds",
+            "spec_accepted_per_round")
+        # occupancy gauges, refreshed once per engine iteration
+        m.declare_gauge(
+            "queue_depth", "slots_free", "slots_prefill", "slots_decode",
+            "cache_slots_active", "cache_tokens_live", "cache_pages_live",
+            "cache_tokens_evicted")
+        m.declare_series("spec_accept_by_slot")
+        self.telemetry = tel
+
+    @property
+    def stats(self) -> StatsView:
+        """Typed view over the telemetry registry (legacy ``stats`` dict
+        shape: counters read/write as ints, ``decode_step_seconds`` reads as
+        the reservoir list; undeclared keys raise)."""
+        return StatsView(self.telemetry.metrics)
 
     # ------------------------------------------------------------------ #
     def run(self, requests: List[Request]) -> List[Request]:
@@ -246,17 +292,19 @@ class Engine:
         (completion order, which may differ from submission order)."""
         sched = Scheduler(self.slots, self.kv.capacity, self.chunk,
                           ring=self.kv.paged,
-                          default_sampling=self.config.default_sampling)
+                          default_sampling=self.config.default_sampling,
+                          telemetry=self.telemetry)
         for r in requests:
             sched.submit(r)
         with mesh_utils.use_mesh(self.mesh):
             while sched.busy():
                 self._iterate(sched)
-        self.stats["requests_completed"] += len(sched.done)
+        self.telemetry.metrics.inc("requests_completed", len(sched.done))
         return sched.done
 
     # ------------------------------------------------------------------ #
     def _iterate(self, sched: Scheduler) -> None:
+        tel = self.telemetry
         newly = sched.admit()
         if newly:
             mask = np.zeros((self.slots,), bool)
@@ -266,50 +314,66 @@ class Engine:
         plan = sched.prefill_plan()
         if plan is not None:
             tokens, num_valid, finishing = plan
-            logits, self.kv.tree = self._prefill(
-                self.params, self.kv.tree, jnp.asarray(tokens),
-                jnp.asarray(num_valid))
-            self.stats["prefill_dispatches"] += 1
-            self.stats["prefill_tokens"] += int(num_valid.sum())
+            # satellite of §13: prefill dispatches are timed like decode
+            # steps, so TTFT decomposes into queue + prefill + first-decode
+            with tel.dispatch("prefill_chunk", hist="prefill_chunk_seconds",
+                              tokens=int(num_valid.sum())):
+                logits, self.kv.tree = self._prefill(
+                    self.params, self.kv.tree, jnp.asarray(tokens),
+                    jnp.asarray(num_valid))
+                if finishing:
+                    first = self._sample(
+                        logits, jnp.asarray(sched.any_sampling(finishing)),
+                        *map(jnp.asarray, sched.sampler_arrays()))
+                    first = np.asarray(first)
+            tel.metrics.inc("prefill_dispatches")
+            tel.metrics.inc("prefill_tokens", int(num_valid.sum()))
             if finishing:
-                first = self._sample(
-                    logits, jnp.asarray(sched.any_sampling(finishing)),
-                    *map(jnp.asarray, sched.sampler_arrays()))
-                first = np.asarray(first)
                 for s in finishing:
+                    tel.on_prefill_done(sched.slots[s].req)
                     sched.on_sampled(s, first[s])
-                    self.stats["generated_tokens"] += 1
+                tel.metrics.inc("generated_tokens", len(finishing))
 
         active = sched.decode_mask()
-        if not active.any():
-            return
-        t0 = time.perf_counter()
-        if self._spec is not None:
-            # slots whose round window straddles a ring-eviction boundary
-            # take a plain decode step instead (a chunked verify would
-            # evict a block that its earlier queries must still see; the
-            # oracle evicts it only when the boundary token is written) —
-            # up to spec_k waves approaching each block crossing.
-            spec_wave, plain_wave = self._spec.split_wave(self.kv, active)
-            if spec_wave.any():
-                self._spec.round(self, sched, spec_wave)
-            if plain_wave.any():
-                self._plain_decode(sched, plain_wave)
-        else:
-            self._plain_decode(sched, active)
-        self.stats["decode_step_seconds"].append(time.perf_counter() - t0)
+        if active.any():
+            t0 = tel.now() if tel.enabled else 0.0
+            if self._spec is not None:
+                # slots whose round window straddles a ring-eviction boundary
+                # take a plain decode step instead (a chunked verify would
+                # evict a block that its earlier queries must still see; the
+                # oracle evicts it only when the boundary token is written) —
+                # up to spec_k waves approaching each block crossing.
+                spec_wave, plain_wave = self._spec.split_wave(self.kv, active)
+                if spec_wave.any():
+                    self._spec.round(self, sched, spec_wave)
+                if plain_wave.any():
+                    self._plain_decode(sched, plain_wave)
+            else:
+                self._plain_decode(sched, active)
+            if tel.enabled:
+                tel.metrics.observe("decode_step_seconds", tel.now() - t0)
+        if tel.enabled:
+            states = [s.state for s in sched.slots]
+            tel.set_occupancy(
+                {"queue_depth": len(sched.pending),
+                 "slots_free": states.count(SlotState.FREE),
+                 "slots_prefill": states.count(SlotState.PREFILL),
+                 "slots_decode": states.count(SlotState.DECODE)},
+                self.kv.occupancy())
 
     def _plain_decode(self, sched: Scheduler, active: np.ndarray) -> None:
         """One fused decode_step + sample dispatch for the ``active`` slots."""
         feed = sched.feed_tokens()
         temp, top_k, top_p, seed, step = sched.sampler_arrays()
-        nxt, self.kv.tree = self._decode(
-            self.params, self.kv.tree, jnp.asarray(feed),
-            jnp.asarray(active), jnp.asarray(sched.any_sampling()),
-            jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
-            jnp.asarray(seed), jnp.asarray(step))
-        nxt = np.asarray(nxt)
-        self.stats["decode_dispatches"] += 1
+        with self.telemetry.dispatch("decode_step",
+                                     slots=int(active.sum())):
+            nxt, self.kv.tree = self._decode(
+                self.params, self.kv.tree, jnp.asarray(feed),
+                jnp.asarray(active), jnp.asarray(sched.any_sampling()),
+                jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
+                jnp.asarray(seed), jnp.asarray(step))
+            nxt = np.asarray(nxt)
+        self.telemetry.metrics.inc("decode_dispatches")
         for s in np.flatnonzero(active):
             sched.on_sampled(int(s), nxt[s])
-            self.stats["generated_tokens"] += 1
+        self.telemetry.metrics.inc("generated_tokens", int(active.sum()))

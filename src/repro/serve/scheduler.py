@@ -30,6 +30,7 @@ from typing import List, Optional
 import numpy as np
 
 from .sampling import SamplingParams
+from .telemetry import Telemetry
 
 
 @dataclasses.dataclass
@@ -53,6 +54,9 @@ class Request:
     # tokens of this request that verification accepted (acceptance rate =
     # spec_accepted / drafts offered; DESIGN.md §10)
     spec_accepted: int = 0
+    # lifecycle stamps (serve/telemetry.py RequestTrace: submit -> admit ->
+    # prefill-done -> first-token -> complete), None with telemetry disabled
+    trace: Optional[object] = None
 
 
 class SlotState(enum.Enum):
@@ -85,7 +89,8 @@ class Scheduler:
 
     def __init__(self, slots: int, capacity: Optional[int], chunk: int, *,
                  ring: bool = True,
-                 default_sampling: Optional[SamplingParams] = None):
+                 default_sampling: Optional[SamplingParams] = None,
+                 telemetry=None):
         assert chunk >= 1 and (capacity is None or capacity >= 1)
         self.capacity = capacity
         self.chunk = chunk if capacity is None else min(chunk, capacity)
@@ -96,12 +101,16 @@ class Scheduler:
         self.done: List[Request] = []
         # ragged per-slot accepted-draft totals roll up here (spec decoding)
         self.spec_accepted_total = 0
+        # lifecycle stamping (serve/telemetry.py); None = disabled no-op
+        # (direct construction in tests) — the engine always passes its own
+        self.telemetry = telemetry or Telemetry(enabled=False)
 
     # ---- admission ---------------------------------------------------------
     def submit(self, req: Request) -> None:
         plen = int(len(req.prompt))
         if req.sampling is None:
             req.sampling = self.default_sampling or SamplingParams()
+        self.telemetry.on_submit(req)
         if self.capacity is not None:
             if plen > self.capacity:
                 raise ValueError(
@@ -117,6 +126,7 @@ class Scheduler:
             # without occupying a slot or issuing a spurious decode step
             req.out = np.array([], np.int32)
             self.done.append(req)
+            self.telemetry.on_complete(req)
             return
         self.pending.append(req)
 
@@ -127,6 +137,7 @@ class Scheduler:
             if slot.state is SlotState.FREE and self.pending:
                 req = self.pending.popleft()
                 self.slots[s] = Slot(state=SlotState.PREFILL, req=req)
+                self.telemetry.on_admit(req, s)
                 newly.append(s)
         return newly
 
@@ -212,6 +223,7 @@ class Scheduler:
         assert slot.state is SlotState.DECODE and slot.req is not None
         slot.req.spec_accepted += int(n_accepted)
         self.spec_accepted_total += int(n_accepted)
+        self.telemetry.on_spec_accept(slot.req, s, int(n_accepted))
         delivered = 0
         for t in tokens:
             delivered += 1
@@ -226,11 +238,13 @@ class Scheduler:
         slot.out.append(int(token))
         slot.token = int(token)
         slot.generated += 1
+        self.telemetry.on_token(slot.req)
         if slot.generated >= slot.req.max_new_tokens:
             req = slot.req
             req.out = np.array(slot.out, np.int32)
             self.done.append(req)
             self.slots[s] = Slot()
+            self.telemetry.on_complete(req)
             return req
         return None
 

@@ -64,10 +64,13 @@ def _make_spec_fns(cfg: ModelConfig):
     model = get_model(cfg)
     dcfg = draft_config(cfg)
 
+    scope = f"serve.{cfg.family}.spec"  # profiler grouping (DESIGN.md §13)
+
     def draft_step(params, cache, tokens, active, any_sampling, temp, top_k,
                    top_p, seed, step):
-        logits, cache = model.decode_step(params, dcfg, cache, tokens,
-                                          active=active)
+        with jax.named_scope(f"{scope}.draft"):
+            logits, cache = model.decode_step(params, dcfg, cache, tokens,
+                                              active=active)
         # all-greedy rounds skip the sort/softmax pipeline (cf. the engine's
         # decode fast path); the greedy branch's q_probs are never read
         q, nxt = jax.lax.cond(
@@ -80,8 +83,9 @@ def _make_spec_fns(cfg: ModelConfig):
         return jnp.where(active, nxt, tokens), q, cache
 
     def verify(params, cache, tokens, num_valid):
-        return model.prefill_chunk(params, cfg, cache, tokens, num_valid,
-                                   all_logits=True, collect_kv=True)
+        with jax.named_scope(f"{scope}.verify"):
+            return model.prefill_chunk(params, cfg, cache, tokens, num_valid,
+                                       all_logits=True, collect_kv=True)
 
     def accept(logits, draft, q_probs, temp, top_k, top_p, seed, step0,
                active):
@@ -132,7 +136,7 @@ class SpecDecoder:
         """
         K = self.k
         kv = engine.kv
-        stats = engine.stats
+        tel = engine.telemetry
         snap = kv.spec_snapshot(K + 1)
         act = jnp.asarray(active)
         fed = jnp.asarray(sched.feed_tokens())
@@ -142,20 +146,22 @@ class SpecDecoder:
 
         tok, drafts, qs = fed, [], []
         for j in range(K):
-            tok, q, kv.tree = self._draft(
-                engine.params, kv.tree, tok, act, any_s, temp, top_k, top_p,
-                seed, step0 + j)
+            with tel.dispatch("draft", hist="draft_seconds", step=j):
+                tok, q, kv.tree = self._draft(
+                    engine.params, kv.tree, tok, act, any_s, temp, top_k,
+                    top_p, seed, step0 + j)
             drafts.append(tok)
             qs.append(q)
-            stats["draft_dispatches"] += 1
+            tel.metrics.inc("draft_dispatches")
         # roll the draft's approximate writes back before the exact rewrite
         kv.spec_rewind(snap, snap["lengths"], act)
 
         chunk = jnp.stack([fed] + drafts, axis=1)  # (B, K+1)
         num_valid = jnp.where(act, K + 1, 0).astype(jnp.int32)
-        logits, kv.tree, chunk_kv = self._verify(
-            engine.params, kv.tree, chunk, num_valid)
-        stats["verify_dispatches"] += 1
+        with tel.dispatch("verify", hist="verify_seconds", k=K):
+            logits, kv.tree, chunk_kv = self._verify(
+                engine.params, kv.tree, chunk, num_valid)
+        tel.metrics.inc("verify_dispatches")
 
         out, n_out, n_acc = self._accept(
             logits, jnp.stack(drafts, axis=1), jnp.stack(qs, axis=1),
@@ -169,9 +175,10 @@ class SpecDecoder:
         for s in np.flatnonzero(active):
             emitted += sched.on_spec_tokens(
                 int(s), out[s, : n_out[s]], int(n_acc[s]))
-        stats["generated_tokens"] += emitted
-        stats["spec_rounds"] += 1
-        stats["spec_drafted_tokens"] += int(K * active.sum())
-        stats["spec_accepted_tokens"] += int(n_acc[active].sum())
+        m = tel.metrics
+        m.inc("generated_tokens", emitted)
+        m.inc("spec_rounds")
+        m.inc("spec_drafted_tokens", int(K * active.sum()))
+        m.inc("spec_accepted_tokens", int(n_acc[active].sum()))
         # delivered to requests (surplus past max_new_tokens is discarded)
-        stats["spec_emitted_tokens"] += emitted
+        m.inc("spec_emitted_tokens", emitted)

@@ -1,0 +1,284 @@
+"""Telemetry conformance suite (DESIGN.md §13).
+
+Pins the observability contract of the serving stack:
+
+  * typed metrics — the registry's declared-at-init discipline (undeclared
+    names raise ``UndeclaredMetric``, the regression for the old ad-hoc
+    ``Engine.stats`` dict any component could mint keys into), bounded
+    histogram reservoirs, gauge peaks, and the ``StatsView`` compatibility
+    facade;
+  * observer effect — token streams are bit-identical with telemetry on vs
+    off, for the plain AND the speculative engine (the clock never touches
+    numerics), and the disabled path really is a no-op (no stamps, no
+    reservoir growth, no trace events);
+  * request-lifecycle tracing — stamps are monotonic
+    (submit <= admit <= prefill_done <= first_token <= complete), TTFT
+    decomposes into queue + prefill + first-decode, and the exported
+    Chrome-trace event stream is well-formed (schema, monotonic ts,
+    matched begin/end) and survives a JSONL round-trip;
+  * occupancy — the uniform cache occupancy keys are populated for all
+    three cache families (ring-paged, recurrent-state, hybrid-window).
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import get_model, init_params
+from repro.serve import (Engine, EngineConfig, Request, SamplingParams,
+                         UndeclaredMetric)
+from repro.serve.telemetry import (MetricsRegistry, StatsView,
+                                   validate_chrome_events)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config("qwen3-1.7b")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(get_model(cfg).param_specs(cfg), jax.random.PRNGKey(0))
+
+
+def _requests():
+    """Ragged mix with readmission pressure (4 requests, 2 slots below)."""
+    return [
+        Request(prompt=np.arange(1, 20), max_new_tokens=6,
+                sampling=SamplingParams(temperature=0.9, seed=7)),
+        Request(prompt=np.array([5, 11, 2]), max_new_tokens=4),
+        Request(prompt=np.arange(2, 12), max_new_tokens=5,
+                sampling=SamplingParams(temperature=1.0, top_k=5, seed=3)),
+        Request(prompt=np.array([9]), max_new_tokens=3),
+    ]
+
+
+def _engine(cfg, params, **kw):
+    base = dict(slots=2, max_len=64, chunk=8)
+    base.update(kw)
+    return Engine(cfg, params, EngineConfig(**base))
+
+
+# --------------------------------------------------------------------------- #
+# typed metrics registry
+# --------------------------------------------------------------------------- #
+def test_undeclared_metric_raises(cfg, params):
+    """Regression: components can no longer invent stats keys.
+
+    The pre-telemetry engine's ``stats`` was a plain dict, so a typo'd or
+    invented key silently forked the schema; every surface must now raise.
+    """
+    eng = _engine(cfg, params)
+    with pytest.raises(UndeclaredMetric):
+        eng.stats["invented_key"]
+    with pytest.raises(UndeclaredMetric):
+        eng.stats["invented_key"] = 1
+    with pytest.raises(UndeclaredMetric):
+        eng.telemetry.metrics.inc("invented_key")
+    with pytest.raises(UndeclaredMetric):
+        eng.telemetry.metrics.observe("invented_seconds", 0.1)
+    # UndeclaredMetric is a KeyError: dict-era callers catching KeyError
+    # (or using ``"x" in stats``) keep working
+    assert issubclass(UndeclaredMetric, KeyError)
+    assert "invented_key" not in eng.stats
+
+
+def test_reset_stats_declares_every_writer_key(cfg, params):
+    """Every counter any component writes — including the speculative keys
+    SpecDecoder increments — exists (zeroed) right after reset_stats."""
+    eng = _engine(cfg, params, spec_k=2)
+    eng.run(_requests())
+    assert eng.stats["spec_rounds"] > 0
+    eng.reset_stats()
+    for key in ("prefill_dispatches", "decode_dispatches", "prefill_tokens",
+                "generated_tokens", "requests_completed", "spec_rounds",
+                "draft_dispatches", "verify_dispatches", "spec_drafted_tokens",
+                "spec_accepted_tokens", "spec_emitted_tokens"):
+        assert eng.stats[key] == 0, key
+    assert eng.stats["decode_step_seconds"] == []
+    # and the engine can serve again with the fresh registry
+    done = eng.run(_requests()[:1])
+    assert len(done) == 1 and eng.stats["spec_rounds"] >= 0
+
+
+def test_registry_types_and_bounds():
+    m = MetricsRegistry()
+    m.declare_counter("n")
+    m.declare_histogram("lat", maxlen=4)
+    m.declare_gauge("occ")
+    with pytest.raises(ValueError, match="declared twice"):
+        m.declare_counter("n")
+    for i in range(10):  # reservoir stays bounded; count/sum stay exact
+        m.observe("lat", float(i))
+    h = m.get("lat")
+    assert len(h.reservoir) == 4 and h.count == 10 and h.total == 45.0
+    m.set_gauge("occ", 3.0)
+    m.set_gauge("occ", 1.0)
+    assert m.get("occ").value == 1.0 and m.get("occ").peak == 3.0
+    with pytest.raises(TypeError, match="histogram"):
+        m.inc("lat")
+    view = StatsView(m)
+    view["n"] += 2  # the legacy read-modify-write idiom
+    assert view["n"] == 2
+    with pytest.raises(TypeError, match="observe-only"):
+        view["lat"] = [1.0]
+
+
+def test_snapshot_json_roundtrip_and_prometheus(cfg, params):
+    eng = _engine(cfg, params)
+    eng.run(_requests())
+    snap = eng.telemetry.snapshot()
+    assert json.loads(json.dumps(snap)) == snap
+    assert snap["tags"]["family"] == cfg.family
+    assert snap["counters"]["requests_completed"] == 4
+    for name in ("ttft_seconds", "inter_token_seconds", "queue_wait_seconds",
+                 "prefill_seconds", "decode_step_seconds",
+                 "prefill_chunk_seconds"):
+        h = snap["histograms"][name]
+        assert set(h) == {"count", "sum", "mean", "p50", "p90", "p99", "max"}
+    assert snap["histograms"]["ttft_seconds"]["count"] == 4
+    assert snap["histograms"]["ttft_seconds"]["p99"] > 0
+    text = eng.telemetry.prometheus_text()
+    assert "mra_serve_requests_completed 4" in text
+    assert 'mra_serve_ttft_seconds{quantile="0.99"}' in text
+    assert "mra_serve_cache_pages_live" in text
+
+
+def test_prefill_dispatches_are_timed(cfg, params):
+    """Satellite of §13: prefill is timed like decode, so TTFT decomposes
+    into queue + prefill + first-decode with nothing unaccounted."""
+    eng = _engine(cfg, params)
+    eng.run(_requests())
+    snap = eng.telemetry.snapshot()
+    h = snap["histograms"]["prefill_chunk_seconds"]
+    assert h["count"] == eng.stats["prefill_dispatches"] > 0
+    assert h["sum"] > 0
+
+
+# --------------------------------------------------------------------------- #
+# observer effect: telemetry never changes tokens
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("spec_k", [0, 2])
+def test_tokens_bit_identical_with_telemetry_on_vs_off(cfg, params, spec_k):
+    on = _engine(cfg, params, spec_k=spec_k, telemetry=True).run(_requests())
+    off = _engine(cfg, params, spec_k=spec_k, telemetry=False).run(_requests())
+    by = {len(r.prompt): r.out for r in off}
+    for r in on:
+        np.testing.assert_array_equal(r.out, by[len(r.prompt)])
+
+
+def test_batched_equals_solo_under_telemetry(cfg, params):
+    """Batched serving with full telemetry == solo serving with it disabled:
+    tracing composes with the engine's core conformance guarantee."""
+    batched = _engine(cfg, params, telemetry=True).run(_requests())
+    by = {len(r.prompt): r.out for r in batched}
+    for req in _requests():
+        solo = _engine(cfg, params, telemetry=False).run([req])[0]
+        np.testing.assert_array_equal(solo.out, by[len(solo.prompt)])
+
+
+def test_disabled_path_is_noop(cfg, params):
+    """telemetry=False: counters keep counting (engine bookkeeping), but no
+    stamps, no reservoir growth, no gauges, no trace events."""
+    eng = _engine(cfg, params, telemetry=False)
+    done = eng.run(_requests())
+    assert eng.stats["requests_completed"] == 4
+    assert eng.stats["generated_tokens"] > 0
+    assert eng.stats["decode_step_seconds"] == []
+    snap = eng.telemetry.snapshot()
+    assert snap["histograms"]["ttft_seconds"]["count"] == 0
+    assert snap["gauges"]["cache_pages_live"]["peak"] == 0.0
+    assert len(eng.telemetry.trace.events) == 0
+    assert all(r.trace is None for r in done)
+
+
+# --------------------------------------------------------------------------- #
+# request-lifecycle tracing
+# --------------------------------------------------------------------------- #
+def test_lifecycle_stamps_and_ttft_decomposition(cfg, params):
+    eng = _engine(cfg, params)
+    done = eng.run(_requests())
+    for r in done:
+        tr = r.trace
+        assert tr is not None
+        assert (tr.submit <= tr.admit <= tr.prefill_done
+                <= tr.first_token <= tr.complete)
+        assert len(tr.token_times) == r.max_new_tokens
+        assert tr.token_times == sorted(tr.token_times)
+        assert len(tr.inter_token) == r.max_new_tokens - 1
+        # TTFT decomposes exactly: queue wait + prefill + first-decode gap
+        parts = (tr.queue_wait + (tr.prefill_done - tr.admit)
+                 + (tr.first_token - tr.prefill_done))
+        assert abs(tr.ttft - parts) < 1e-9
+        assert tr.ttft > 0
+
+
+def test_trace_events_well_formed_and_jsonl_roundtrip(cfg, params, tmp_path):
+    """The exported trace is valid Chrome-trace JSONL: schema keys present,
+    timestamps monotonic, every begin matched by an end — including with
+    degenerate (slotless) requests in the mix."""
+    eng = _engine(cfg, params, spec_k=2)
+    eng.run(_requests()
+            + [Request(prompt=np.array([], np.int32), max_new_tokens=2)])
+    events = eng.telemetry.trace.chrome_events()
+    validate_chrome_events(events)
+    names = {e["name"] for e in events}
+    assert {"request", "queued", "prefill", "decode",
+            "prefill_chunk", "draft", "verify"} <= names
+    # request-lifecycle spans live on the slot lanes, dispatch spans on the
+    # engine lane, so Perfetto shows per-slot timelines under the dispatches
+    assert {e["tid"] for e in events if e["name"] == "request"} \
+        <= set(range(eng.slots))
+    assert all(e["tid"] == eng.telemetry.ENGINE_TID
+               for e in events if e["name"] == "prefill_chunk")
+    path = tmp_path / "trace.jsonl"
+    n = eng.telemetry.trace.export_jsonl(str(path))
+    from repro.serve.telemetry import load_trace_jsonl
+    loaded = load_trace_jsonl(str(path))
+    assert len(loaded) == n
+    validate_chrome_events(loaded)
+
+
+def test_spec_acceptance_series_per_slot(cfg, params):
+    eng = _engine(cfg, params, spec_k=2)
+    done = eng.run(_requests())
+    series = eng.telemetry.snapshot()["series"]["spec_accept_by_slot"]
+    assert series, "speculative engine recorded no per-slot acceptance"
+    assert set(series) <= {str(s) for s in range(eng.slots)}
+    total = sum(v for vs in series.values() for v in vs)
+    assert total == eng.stats["spec_accepted_tokens"]
+    # the per-request acceptance trace mirrors the slot series
+    assert sum(a for r in done for a in r.trace.spec_accepts) == total
+
+
+# --------------------------------------------------------------------------- #
+# occupancy across the three cache families
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("arch,evicting", [
+    ("qwen3-1.7b", True),        # RingPagedKVCache: ring eviction
+    ("rwkv6-7b", False),         # RecurrentStateCache: state absorbs history
+    ("recurrentgemma-9b", True),  # HybridWindowCache: window slides
+])
+def test_cache_occupancy_gauges_all_families(arch, evicting):
+    cfg = get_smoke_config(arch)
+    params = init_params(get_model(cfg).param_specs(cfg), jax.random.PRNGKey(0))
+    # generate past the window so the paged/hybrid backends actually evict
+    eng = Engine(cfg, params, EngineConfig(slots=2, max_len=32, chunk=8))
+    eng.run([Request(prompt=np.arange(1, 9), max_new_tokens=30),
+             Request(prompt=np.array([3, 4, 5]), max_new_tokens=4)])
+    g = eng.telemetry.snapshot()["gauges"]
+    for key in ("cache_slots_active", "cache_tokens_live", "cache_pages_live",
+                "cache_tokens_evicted", "slots_free", "slots_decode",
+                "queue_depth"):
+        assert key in g, key
+    assert g["cache_slots_active"]["peak"] == 2
+    assert g["cache_tokens_live"]["peak"] > 0
+    assert g["slots_free"]["value"] == 2  # all drained at completion
+    if evicting:
+        assert g["cache_pages_live"]["peak"] > 0
+        assert g["cache_tokens_evicted"]["peak"] > 0
+    else:
+        assert g["cache_pages_live"]["peak"] == 0.0
+        assert g["cache_tokens_evicted"]["peak"] == 0.0
