@@ -137,3 +137,35 @@ def run(emit):
 
     us = time_call(lambda q, k, v: full_attention(q, k, v), q, k, v)
     emit("full_attention_n512", us, "0.0000")
+
+    # H-level pyramid error (DESIGN.md §14): decode against a long stream
+    # served from a fine window 8x smaller than the context. H=2 is today's
+    # ring — evicted history vanishes entirely; H>=3 keeps it as collapsed
+    # (int8 / int4) background mass, so error vs the exact softmax over the
+    # FULL stream should drop monotonically as levels are added.
+    import jax.numpy as jnp
+
+    from repro.core import hier
+    from repro.core.mra_decode import PyramidState, mra2_chunk_attention
+
+    S_total, block, nb = 2048, 32, 8  # window = 256 tokens
+    qh, kh, vh = structured_qkv(rng, B=1, H=4, N=S_total, D=32)
+    qd = jnp.asarray(qh[:, :, -1:, :])
+    lengths = jnp.full((1,), S_total, jnp.int32)
+    q_pos = jnp.full((1, 1), S_total - 1, jnp.int32)
+    exact = np.asarray(full_decode_attention(qd, jnp.asarray(kh),
+                                             jnp.asarray(vh), lengths))
+    hcfg = MraConfig(block_size=block, causal=True)
+    for H in (2, 3, 4):
+        cache = hier.build_hier_stream(jnp.asarray(kh), jnp.asarray(vh),
+                                       block=block, nb=nb, levels=H)
+        pyr = PyramidState(cache["pyr_k"][0], cache["pyr_v"][0],
+                           hier.cache_upper_view(cache, 0))
+        run_h = lambda q_: mra2_chunk_attention(  # noqa: E731
+            q_, cache["k_cache"], cache["v_cache"], lengths, q_pos, hcfg,
+            decode_blocks=4, pyramid=pyr, page_blocks=cache["page_blocks"])
+        us = time_call(run_h, qd)
+        err = float(np.linalg.norm(np.asarray(run_h(qd)) - exact)
+                    / (np.linalg.norm(exact) + 1e-9))
+        emit(f"hier_decode_err_h{H}_n{S_total}_w{nb * block}", us,
+             f"{err:.4f}")

@@ -52,6 +52,7 @@ REQUIRED_ROWS = {
         "serve_telemetry_overhead_ratio",
         "serve_cache_occupancy",
         "serve_spec_accept_per_slot",
+        "serve_longctx_tok_per_s",
     ),
     "spec_bench": ("spec_base_tok_per_dispatch",),
 }

@@ -50,6 +50,45 @@ def _requests(rng, vocab, lens, new_tokens):
     return reqs
 
 
+def _long_ctx(emit, cfg, params, mesh, *, smoke):
+    """H=3 collapse-up serving (DESIGN.md §14): context >> the fine window.
+
+    One slot streams a prompt far past ``max_len`` through chunked prefill —
+    every evicted page collapses into the int8/int4 level rings + fp32 tail
+    instead of vanishing — then decodes from the collapsed state. The row's
+    throughput is context tokens processed per second (prefill-dominated);
+    the derived column pins the memory claim: live fine tokens stay bounded
+    by the window while the tail absorbs the distant history. The smoke
+    variant (scripts/ci.sh fast) shrinks the stream and routes attention
+    through the interpret-mode serving kernel so the in-kernel upper-level
+    fold is exercised end-to-end off-TPU.
+    """
+    hcfg = cfg.replace(attention=cfg.attention.replace(levels=3))
+    if smoke:
+        hcfg = hcfg.replace(attn_use_kernel=True,
+                            attn_interpret=jax.devices()[0].platform != "tpu")
+    S, max_len, chunk = (2048, 256, 128) if smoke else (65536, 1024, 512)
+    rng = np.random.default_rng(42)
+    eng = Engine(hcfg, params, EngineConfig(
+        slots=1, max_len=max_len, chunk=chunk, mesh=mesh))
+    req = Request(prompt=rng.integers(1, cfg.vocab, size=S), max_new_tokens=4)
+    t0 = time.perf_counter()
+    done = eng.run([req])
+    dt = time.perf_counter() - t0
+    assert len(done) == 1 and len(done[0].out) == req.max_new_tokens
+    g = eng.telemetry.snapshot()["gauges"]
+    live = g["cache_tokens_live"]["peak"]
+    tail = g["cache_tail_tokens"]["peak"]
+    assert g["cache_level2_entries"]["peak"] > 0, "no collapsed entries"
+    assert tail > 0, "long context never reached the tail"
+    assert live <= max_len, (live, max_len)
+    tok = S + len(done[0].out)
+    tag = "serve_longctx_smoke" if smoke else "serve_longctx"
+    emit(f"{tag}_tok_per_s", dt / tok * 1e6,
+         f"{tok / dt:.0f} ctx={S} window={max_len} live_peak={live:.0f} "
+         f"tail_peak={tail:.0f}")
+
+
 def run(emit, trace_path=None):
     mesh = mesh_utils.get_mesh()
     cfg = get_smoke_config("qwen3-1.7b")
@@ -223,6 +262,10 @@ def run(emit, trace_path=None):
         emit("serve_trace_events", dt * 1e6,
              f"{n} events -> {trace_path} (validated)")
 
+    # H=3 collapse-up long context (DESIGN.md §14): a 64k-token stream
+    # served from a 1k-token fine window — the REQUIRED_ROWS memory claim
+    _long_ctx(emit, cfg, params, mesh, smoke=False)
+
     # recurrent/hybrid families through the same engine (DESIGN.md §12):
     # rwkv6's O(1) wkv state and recurrentgemma's RG-LRU + window ring serve
     # under identical continuous batching; the dispatch-economy claim is the
@@ -275,6 +318,10 @@ def main() -> None:
     ap.add_argument("--trace", default=None,
                     help="export the speculative engine's request/dispatch "
                          "trace as Chrome-trace JSONL to this path")
+    ap.add_argument("--long-ctx-smoke", action="store_true",
+                    help="run only the H=3 collapse-up long-context smoke "
+                         "(small stream, interpret-mode kernel; the "
+                         "scripts/ci.sh fast leg)")
     args = ap.parse_args()
 
     from repro.launch.mesh import parse_mesh
@@ -286,7 +333,15 @@ def main() -> None:
         sys.stdout.flush()
 
     with mesh_utils.use_mesh(parse_mesh(args.mesh)):
-        run(emit, trace_path=args.trace)
+        if args.long_ctx_smoke:
+            mesh = mesh_utils.get_mesh()
+            cfg = get_smoke_config("qwen3-1.7b").replace(
+                attn_shard=mesh is not None)
+            params = init_params(get_model(cfg).param_specs(cfg),
+                                 jax.random.PRNGKey(0))
+            _long_ctx(emit, cfg, params, mesh, smoke=True)
+        else:
+            run(emit, trace_path=args.trace)
 
 
 if __name__ == "__main__":

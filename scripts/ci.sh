@@ -45,6 +45,11 @@ case "${1:-fast}" in
     # speculative-decoding smoke (DESIGN.md §10): K=2, tiny model, jnp paths
     # (kernels stay in interpret-capable territory on the decode side)
     python -m benchmarks.spec_bench --smoke
+    # H-level long-context smoke (DESIGN.md §14): an H=3 engine streams a
+    # context 8x its fine window through the interpret-mode serving kernel,
+    # collapsing evicted pages up the hierarchy (asserts per-level occupancy
+    # + bounded live window internally)
+    python -m benchmarks.serve_bench --long-ctx-smoke
     ;;
   lint)
     # tracked bytecode is a repo-hygiene regression (76 .pyc files were once

@@ -68,6 +68,17 @@ class AttentionSpec:
     # halves decode memory footprint and HBM traffic; MRA decode dequantizes
     # only the gathered blocks. Only honored by the mra2/mra2_s decode path.
     kv_quant: bool = False
+    # H-level pyramid (DESIGN.md §14): levels=2 is the paper's two-level
+    # MRA-2 (bit-identical to the pre-hierarchy engine); levels>=3 adds
+    # collapsed rings over evicted history (core/hier.py) so the ring cache
+    # serves contexts far beyond its fine window. hier_pages sizes each
+    # collapsed level's ring (0 = same as the fine page count).
+    levels: int = 2
+    hier_pages: int = 0
+    # Background resolution of coarse-only speculative drafts (MraConfig.
+    # draft_level): >1 folds the far field over 2^(draft_level-1)-page
+    # groups. jnp-route only; draft_config() keeps drafts off the kernel.
+    draft_level: int = 1
 
     @property
     def budget_blocks(self) -> int:
@@ -85,6 +96,7 @@ class AttentionSpec:
             kernel_bwd=self.kernel_bwd,
             kernel_mode=self.kernel_mode,
             interpret=self.interpret,
+            draft_level=self.draft_level,
         )
 
     def replace(self, **kw) -> "AttentionSpec":

@@ -1,0 +1,397 @@
+"""H-level pyramid: collapse-up hierarchy over evicted ring pages.
+
+The MRA-2 decode path (core/mra_decode.py) is two-level: exact fine blocks
+in the ring cache plus one layer of per-page coarse sums (the pyramid).
+This module generalizes it to ``levels = H`` (DESIGN.md §14): pages that
+fall out of the fine window are not dropped — their pyramid sums *collapse
+up* into a telescoping stack of coarser rings, so arbitrarily long history
+stays reachable as background mass at geometrically coarsening resolution.
+
+Level geometry (b = block_size, nb = fine pages):
+
+  * level 0 — the fine ring itself: exact K/V tokens, ``nb`` pages of ``b``.
+  * level 1 — the live pyramid: one fp32 K/V sum per fine page (as today).
+  * level ``l`` in ``[2, H)`` — a ring of ``n_l`` entries over *evicted*
+    history; entry ``e`` aggregates fine blocks ``[e*2^(l-1), (e+1)*2^(l-1))``
+    i.e. spans ``2^(l-1) * b`` tokens, doubling per level.
+  * tail — a single fp32 sum + count absorbing everything evicted past the
+    top level, so no token mass is ever lost (total-sum conservation is a
+    property test).
+
+Collapse-up rule: when fine block ``g`` is evicted, its pyramid sums carry
+into level-2 entry ``g >> 1`` at physical slot ``(g >> 1) % n_2``. If that
+slot holds a different owner, the old entry's mass cascades one level up
+(entry id halves again), and so on into the tail — a carry chain, one slot
+touched per level. Within one prefill chunk (C <= window - b) all evicted
+blocks land in distinct level-2 slots, so batched collapse is
+order-invariant; rounds are still applied oldest-block-first so cascades
+match sequential decode exactly (the spec-rewind replay relies on this).
+
+Quantization schedule: level 1 stays fp32; level 2 stores int8 means
+(qmax 127); levels >= 3 store int4-precision means in int8 containers
+(qmax 7 — jnp has no reliable int4 array dtype on CPU backends, so the
+container stays int8 and the clip range enforces int4 precision); the tail
+is fp32. Entry payloads are means + a per-entry scale; sums are always
+reconstructed as ``mean * count`` with dead entries (count 0) contributing
+exact zeros, so stale payload bytes after a slot reset are harmless.
+
+Cache layout (keys added by models/transformer.cache_specs at H >= 3; the
+serve layer resets/snapshots/rewinds them in serve/cache/paged.py):
+
+  * per layer (lists over layers): ``hier_k{l}``/``hier_v{l}`` int8
+    (B, Hkv, n_l, D) quantized means; ``hier_ks{l}``/``hier_vs{l}`` fp32
+    (B, Hkv, n_l) scales; ``tail_k``/``tail_v`` fp32 (B, Hkv, D) sums.
+  * shared (one array, like ``page_blocks``): ``hier_own{l}`` (B, n_l)
+    int32 entry owner (-1 dead), ``hier_cnt{l}`` (B, n_l) int32 token
+    counts, ``tail_cnt`` (B,) int32.
+
+Attention consumes the whole stack through one ``HierUpper`` view (per-entry
+dequantized means + token counts, all levels and the tail concatenated):
+collapsed entries are strictly older than every live query, so the fold is
+causal-mask-free — liveness (count > 0) is the only gate.
+"""
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+_DEAD = jnp.int32(2**31 - 1)  # sort sentinel: absent eviction slots
+
+
+class HierUpper(NamedTuple):
+    """Dequantized view of every collapsed level + the tail, concatenated.
+
+    k_mean/v_mean: (B, Hkv, NU, D) fp32 per-entry mean key/value.
+    counts: (B, NU) fp32 token count per entry (0 = dead entry).
+    NU = sum(n_l for l in 2..H-1) + 1 (the tail) — static per config.
+    """
+
+    k_mean: jax.Array
+    v_mean: jax.Array
+    counts: jax.Array
+
+
+class LevelPlan(NamedTuple):
+    """Value-independent collapse decisions at one level (all (B,))."""
+
+    slot: jax.Array     # int32 physical slot touched at this level
+    on: jax.Array       # bool: a carry lands at this level
+    reset: jax.Array    # bool: slot content replaced (fresh claim or evict)
+    old_cnt: jax.Array  # int32 slot count before the update
+    new_cnt: jax.Array  # int32 slot count after the update
+
+
+class CollapsePlan(NamedTuple):
+    levels: tuple       # tuple[LevelPlan, ...] bottom-up
+    tail_on: jax.Array  # (B,) bool: a carry reached the tail
+    tail_cnt: jax.Array  # (B,) int32 token count folded into the tail
+
+
+def level_qmax(level: int) -> float:
+    """Quantization ceiling per level: int8 near (l=2), int4 far (l>=3)."""
+    return 127.0 if level == 2 else 7.0
+
+
+def hier_level_ids(cache) -> tuple:
+    """Collapsed-level ids present in a cache mapping (sorted, () at H=2)."""
+    pre = "hier_own"
+    return tuple(sorted(int(k[len(pre):]) for k in cache if k.startswith(pre)))
+
+
+def has_hier(cache) -> bool:
+    return "tail_cnt" in cache
+
+
+def quantize_mean(mean: jax.Array, qmax: float):
+    """Per-entry symmetric quantization of a (…, D) mean. -> (int8, scale)."""
+    amax = jnp.max(jnp.abs(mean.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(mean.astype(jnp.float32) / scale[..., None]),
+                 -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def collapse_tables(
+    owners: Sequence[jax.Array],
+    counts: Sequence[jax.Array],
+    tail_cnt: jax.Array,
+    blk: jax.Array,
+    child_cnt: jax.Array,
+    present: jax.Array,
+):
+    """Run the carry chain on the shared owner/count tables (value-free).
+
+    The plan this returns drives the per-layer value update
+    (``collapse_values``) — the split lets the tables update once per
+    eviction while every layer's sums replay the same decisions.
+
+    Args:
+      owners/counts: per-level (B, n_l) tables, bottom level (l=2) first.
+      tail_cnt: (B,) int32.
+      blk: (B,) evicted fine-block id (garbage where ``present`` is False).
+      child_cnt: (B,) token count of the evicted block (``b`` in the ring).
+      present: (B,) bool — whether this batch row evicts anything.
+
+    Returns:
+      (new_owners, new_counts, new_tail_cnt, CollapsePlan).
+    """
+    b_idx = jnp.arange(blk.shape[0])
+    eid = jnp.where(present, blk, 0) >> 1
+    cc = child_cnt.astype(jnp.int32)
+    on = present
+    new_owners, new_counts, plans = list(owners), list(counts), []
+    for li in range(len(new_owners)):
+        n = new_owners[li].shape[1]
+        slot = eid % n
+        own = new_owners[li][b_idx, slot]
+        oldc = new_counts[li][b_idx, slot]
+        match = on & (own == eid)
+        evict = on & ~match & (own >= 0)
+        reset = on & ~match
+        newc = jnp.where(reset, 0, oldc) + jnp.where(on, cc, 0)
+        new_owners[li] = new_owners[li].at[b_idx, slot].set(
+            jnp.where(on, eid, own))
+        new_counts[li] = new_counts[li].at[b_idx, slot].set(
+            jnp.where(on, newc, oldc))
+        plans.append(LevelPlan(slot, on, reset, oldc, newc))
+        eid = jnp.where(evict, own, 0) >> 1
+        cc = oldc
+        on = evict
+    new_tail = tail_cnt + jnp.where(on, cc, 0)
+    return new_owners, new_counts, new_tail, CollapsePlan(
+        tuple(plans), on, cc)
+
+
+def collapse_values(
+    kq: Sequence[jax.Array],
+    vq: Sequence[jax.Array],
+    ks: Sequence[jax.Array],
+    vs: Sequence[jax.Array],
+    tail_k: jax.Array,
+    tail_v: jax.Array,
+    plan: CollapsePlan,
+    child_k: jax.Array,
+    child_v: jax.Array,
+    qmaxs: Optional[Sequence[float]],
+):
+    """Apply one collapse plan to one layer's payload arrays.
+
+    kq/vq: per-level (B, Hkv, n_l, D) stored means (int8 or fp32);
+    ks/vs: per-level (B, Hkv, n_l) scales; tail_k/tail_v: (B, Hkv, D) sums;
+    child_k/child_v: (B, Hkv, D) fp32 *sums* of the evicted fine block.
+    qmaxs: per-level quantization ceilings, or None to store exact fp32
+    means with unit scales (the property tests run unquantized).
+    """
+    b_idx = jnp.arange(child_k.shape[0])
+    carry_k = child_k.astype(jnp.float32)
+    carry_v = child_v.astype(jnp.float32)
+    kq, vq, ks, vs = list(kq), list(vq), list(ks), list(vs)
+    for li, p in enumerate(plan.levels):
+        oldc = p.old_cnt.astype(jnp.float32)[:, None, None]
+        newc = jnp.maximum(p.new_cnt, 1).astype(jnp.float32)[:, None, None]
+        on3 = p.on[:, None, None]
+        out_sums = []
+        for store, scale, carry in ((kq, ks, carry_k), (vq, vs, carry_v)):
+            old_q = store[li][b_idx, :, p.slot]
+            old_s = scale[li][b_idx, :, p.slot]
+            old_sum = old_q.astype(jnp.float32) * old_s[..., None] * oldc
+            new_sum = (jnp.where(p.reset[:, None, None], 0.0, old_sum)
+                       + jnp.where(on3, carry, 0.0))
+            mean = new_sum / newc
+            if qmaxs is None:
+                q, s = mean.astype(store[li].dtype), jnp.ones_like(old_s)
+            else:
+                q, s = quantize_mean(mean, qmaxs[li])
+                q = q.astype(store[li].dtype)
+            store[li] = store[li].at[b_idx, :, p.slot].set(
+                jnp.where(on3, q, old_q))
+            scale[li] = scale[li].at[b_idx, :, p.slot].set(
+                jnp.where(p.on[:, None], s, old_s))
+            out_sums.append(old_sum)
+        carry_k, carry_v = out_sums
+    t_on = plan.tail_on[:, None, None]
+    tail_k = tail_k + jnp.where(t_on, carry_k, 0.0)
+    tail_v = tail_v + jnp.where(t_on, carry_v, 0.0)
+    return kq, vq, ks, vs, tail_k, tail_v
+
+
+def upper_view(
+    kq: Sequence[jax.Array],
+    vq: Sequence[jax.Array],
+    ks: Sequence[jax.Array],
+    vs: Sequence[jax.Array],
+    counts: Sequence[jax.Array],
+    tail_k: jax.Array,
+    tail_v: jax.Array,
+    tail_cnt: jax.Array,
+) -> HierUpper:
+    """Assemble the dequantized all-levels + tail view attention consumes."""
+    km = [q.astype(jnp.float32) * s[..., None] for q, s in zip(kq, ks)]
+    vm = [q.astype(jnp.float32) * s[..., None] for q, s in zip(vq, vs)]
+    tden = jnp.maximum(tail_cnt, 1).astype(jnp.float32)[:, None, None, None]
+    km.append(tail_k.astype(jnp.float32)[:, :, None] / tden)
+    vm.append(tail_v.astype(jnp.float32)[:, :, None] / tden)
+    cnt = [c.astype(jnp.float32) for c in counts]
+    cnt.append(tail_cnt.astype(jnp.float32)[:, None])
+    return HierUpper(jnp.concatenate(km, axis=2), jnp.concatenate(vm, axis=2),
+                     jnp.concatenate(cnt, axis=1))
+
+
+def eviction_schedule(old_pb: jax.Array, fresh: jax.Array, rounds: int):
+    """Order a batch of evictions oldest-first for sequential collapse.
+
+    old_pb: (B, nb) pre-update page table; fresh: (B, nb) pages recycled by
+    the incoming writes. Returns ``rounds`` pairs ``(blk (B,), on (B,))`` —
+    the j-th oldest evicted owner per batch row (ascending block id keeps
+    cascades identical to one-eviction-at-a-time decode).
+    """
+    vals = jnp.where(fresh & (old_pb >= 0), old_pb, _DEAD)
+    order = jnp.sort(vals, axis=1)
+    return [(order[:, j], order[:, j] < _DEAD)
+            for j in range(min(rounds, old_pb.shape[1]))]
+
+
+# ---------------------------------------------------------------------------
+# Cache-dict glue: models/transformer.py and serve/cache/paged.py drive the
+# collapse through these, so the key layout lives in exactly one place.
+# ---------------------------------------------------------------------------
+
+def cache_collapse_tables(cache, blk, child_cnt, present):
+    """collapse_tables over the shared ``hier_*``/``tail_cnt`` cache keys.
+
+    Returns (updates dict, CollapsePlan); ``cache`` may be any mapping that
+    holds the shared tables (a working copy merged over the real cache).
+    """
+    lids = hier_level_ids(cache)
+    owners = [cache[f"hier_own{l}"] for l in lids]
+    counts = [cache[f"hier_cnt{l}"] for l in lids]
+    no, nc, tc, plan = collapse_tables(
+        owners, counts, cache["tail_cnt"], blk, child_cnt, present)
+    upd = {"tail_cnt": tc}
+    for j, l in enumerate(lids):
+        upd[f"hier_own{l}"] = no[j]
+        upd[f"hier_cnt{l}"] = nc[j]
+    return upd, plan
+
+
+def cache_collapse_layer(cache, i, plan, child_k, child_v, *, quantize=True):
+    """collapse_values for layer ``i``'s payload lists in the cache mapping.
+
+    Returns a dict of the layer's updated arrays keyed by cache key (the
+    caller re-slots them into the per-layer lists).
+    """
+    lids = hier_level_ids(cache)
+    qmaxs = tuple(level_qmax(l) for l in lids) if quantize else None
+    kq, vq, ks, vs, tk, tv = collapse_values(
+        [cache[f"hier_k{l}"][i] for l in lids],
+        [cache[f"hier_v{l}"][i] for l in lids],
+        [cache[f"hier_ks{l}"][i] for l in lids],
+        [cache[f"hier_vs{l}"][i] for l in lids],
+        cache["tail_k"][i], cache["tail_v"][i],
+        plan, child_k, child_v, qmaxs)
+    upd = {"tail_k": tk, "tail_v": tv}
+    for j, l in enumerate(lids):
+        upd[f"hier_k{l}"] = kq[j]
+        upd[f"hier_v{l}"] = vq[j]
+        upd[f"hier_ks{l}"] = ks[j]
+        upd[f"hier_vs{l}"] = vs[j]
+    return upd
+
+
+def cache_store_layer(cache, i, upd):
+    """Re-slot a cache_collapse_layer update into the per-layer lists."""
+    for key, arr in upd.items():
+        vals = list(cache[key])
+        vals[i] = arr
+        cache[key] = vals
+
+
+def cache_upper_view(cache, i) -> Optional[HierUpper]:
+    """The HierUpper view for layer ``i``, or None when the cache is H=2."""
+    lids = hier_level_ids(cache)
+    if not has_hier(cache):
+        return None
+    return upper_view(
+        [cache[f"hier_k{l}"][i] for l in lids],
+        [cache[f"hier_v{l}"][i] for l in lids],
+        [cache[f"hier_ks{l}"][i] for l in lids],
+        [cache[f"hier_vs{l}"][i] for l in lids],
+        [cache[f"hier_cnt{l}"] for l in lids],
+        cache["tail_k"][i], cache["tail_v"][i], cache["tail_cnt"])
+
+
+def build_hier_stream(
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block: int,
+    nb: int,
+    levels: int,
+    hier_n: Optional[int] = None,
+    num_layers: int = 1,
+    quantize: bool = True,
+):
+    """Reference builder: stream (B, Hkv, S, D) K/V through an H-level ring.
+
+    Sequentially writes each fine block into a ``nb``-page ring, collapsing
+    the evicted owner up the hierarchy exactly as decode would — the shared
+    oracle for the approx_error bench and the collapse property tests.
+    Returns a dict shaped like the serve cache slice: ``k_cache``/``v_cache``
+    (the live ring window), ``page_blocks``, ``pyr_k``/``pyr_v`` (per-layer
+    lists, every layer identical), the ``hier_*``/``tail_*`` keys, and
+    ``lengths``.
+    """
+    B, Hkv, S, D = k.shape
+    if S % block:
+        raise ValueError(f"S={S} must be a multiple of block={block}")
+    n = hier_n or nb
+    cache = {
+        "k_cache": jnp.zeros((B, Hkv, nb * block, D), k.dtype),
+        "v_cache": jnp.zeros((B, Hkv, nb * block, D), v.dtype),
+        "page_blocks": jnp.full((B, nb), -1, jnp.int32),
+        "pyr_k": [jnp.zeros((B, Hkv, nb, D), jnp.float32)] * num_layers,
+        "pyr_v": [jnp.zeros((B, Hkv, nb, D), jnp.float32)] * num_layers,
+        "lengths": jnp.full((B,), S, jnp.int32),
+    }
+    if levels >= 3:
+        pdtype = jnp.int8 if quantize else jnp.float32
+        for l in range(2, levels):
+            cache[f"hier_k{l}"] = [jnp.zeros((B, Hkv, n, D), pdtype)] * num_layers
+            cache[f"hier_v{l}"] = [jnp.zeros((B, Hkv, n, D), pdtype)] * num_layers
+            cache[f"hier_ks{l}"] = [jnp.zeros((B, Hkv, n))] * num_layers
+            cache[f"hier_vs{l}"] = [jnp.zeros((B, Hkv, n))] * num_layers
+            cache[f"hier_own{l}"] = jnp.full((B, n), -1, jnp.int32)
+            cache[f"hier_cnt{l}"] = jnp.zeros((B, n), jnp.int32)
+        cache["tail_k"] = [jnp.zeros((B, Hkv, D))] * num_layers
+        cache["tail_v"] = [jnp.zeros((B, Hkv, D))] * num_layers
+        cache["tail_cnt"] = jnp.zeros((B,), jnp.int32)
+
+    ones = jnp.ones((B,), bool)
+    for g in range(S // block):
+        page = g % nb
+        old_owner = cache["page_blocks"][:, page]
+        ksum = cache["pyr_k"][0][:, :, page]
+        vsum = cache["pyr_v"][0][:, :, page]
+        if levels >= 3:
+            present = ones & (old_owner >= 0)
+            upd, plan = cache_collapse_tables(
+                cache, old_owner, jnp.full((B,), block, jnp.int32), present)
+            cache.update(upd)
+            for i in range(num_layers):
+                lay = cache_collapse_layer(cache, i, plan, ksum, vsum,
+                                           quantize=quantize)
+                cache_store_layer(cache, i, lay)
+        kb = k[:, :, g * block:(g + 1) * block]
+        vb = v[:, :, g * block:(g + 1) * block]
+        sl = slice(page * block, (page + 1) * block)
+        cache["k_cache"] = cache["k_cache"].at[:, :, sl].set(kb)
+        cache["v_cache"] = cache["v_cache"].at[:, :, sl].set(vb)
+        for i in range(num_layers):
+            cache["pyr_k"] = list(cache["pyr_k"])
+            cache["pyr_v"] = list(cache["pyr_v"])
+            cache["pyr_k"][i] = cache["pyr_k"][i].at[:, :, page].set(
+                kb.astype(jnp.float32).sum(axis=2))
+            cache["pyr_v"][i] = cache["pyr_v"][i].at[:, :, page].set(
+                vb.astype(jnp.float32).sum(axis=2))
+        cache["page_blocks"] = cache["page_blocks"].at[:, page].set(g)
+    return cache

@@ -64,6 +64,13 @@ class MraConfig:
         "auto" (resolved per dispatch at trace time from the chunk width).
         Ignored by the full-sequence training path.
       interpret: run the Pallas kernels in interpret mode (CPU validation).
+      draft_level: resolution level of the coarse background fold on the
+        decode/chunk path (DESIGN.md §14). 1 = per-page block means (the
+        MRA-2 default); level ``l`` > 1 aggregates the background over
+        groups of ``2^(l-1)`` physically adjacent ring pages (requires the
+        page count to divide evenly), giving speculative drafts a
+        progressively cheaper far field. Groups containing any exact /
+        causally-partial page fall back to per-page background.
     """
 
     block_size: int = 32
@@ -77,6 +84,7 @@ class MraConfig:
     kernel_bwd: str = "pallas"
     kernel_mode: str = "auto"
     interpret: bool = False
+    draft_level: int = 1
 
     def budget(self, n: int) -> int:
         nb = -(-n // self.block_size)

@@ -36,10 +36,15 @@ class PyramidState(NamedTuple):
 
     k_sum / v_sum: (B, Hkv, nb, D) running sums of keys/values per block.
     The block mean is ``sum / count`` with ``count`` derived from ``length``.
+    upper: optional ``core.hier.HierUpper`` — the collapsed-level + tail
+    view of *evicted* history in an H-level hierarchy (DESIGN.md §14).
+    ``None`` (the default, and always at levels=2) keeps every attention
+    path byte-identical to the two-level scheme.
     """
 
     k_sum: jax.Array
     v_sum: jax.Array
+    upper: Optional[NamedTuple] = None
 
     @staticmethod
     def init(batch: int, kv_heads: int, nb: int, d: int, dtype=jnp.float32):
@@ -234,6 +239,10 @@ class ChunkPrelude(NamedTuple):
     v_ds: jax.Array      # (B, Hkv, nb, D) per-page V means
     scale: float
     block_size: int
+    # H-level hierarchy (DESIGN.md §14): collapsed-level + tail means/counts
+    # of evicted history (core.hier.HierUpper), folded into the background
+    # softmax at their own resolution. None on every two-level path.
+    upper: Optional[NamedTuple] = None
 
 
 class PageSelection(NamedTuple):
@@ -287,7 +296,8 @@ def _chunk_prelude(q, k_cache, v_cache, lengths, q_pos, cfg, decode_blocks,
     v_ds = v_sum / denom
 
     qg = q.reshape(B, Hkv, G, C, D).astype(cdt)
-    return ChunkPrelude(qg, pb, counts, k_ds, v_ds, scale, b)
+    upper = pyramid.upper if pyramid is not None else None
+    return ChunkPrelude(qg, pb, counts, k_ds, v_ds, scale, b, upper)
 
 
 def _select_pages(pre: ChunkPrelude, q_pos, m: int) -> PageSelection:
@@ -305,6 +315,22 @@ def _select_pages(pre: ChunkPrelude, q_pos, m: int) -> PageSelection:
     attending stale cache garbage. (The old sentinel ``top_vals >
     NEG_INF * 0.5`` let the FORCE_BONUS of a dead own block pass the
     threshold; the mask-derived ``sel_ok`` cannot.)
+
+    H-level walk (DESIGN.md §14): selection IS the coarse->fine refinement
+    of the hierarchy, organised by residency rather than recursion. Context
+    outside the fine window lives only at the collapsed levels
+    (``pre.upper``) and folds into the softmax at its own resolution — the
+    coarser the level, the older and more compressed the span — while this
+    function walks the finest resident level: every in-window page is
+    scored through its level-1 mean (the coarse read), the top-m subtrees
+    refine to exact token attention (the fine read), and the rest fold
+    through the same level-1 means as background. Each query therefore
+    refines only its top-scoring subtrees; distant context is summarised at
+    the coarsest resolution that still holds it. Per-query descent *within*
+    the window (score level 2 first, open only promising level-2 entries
+    into their level-1 children) is a future refinement — it changes this
+    kernel contract, so it rides the same pinned-parity process as any
+    selection change.
     """
     b = pre.block_size
     live = pre.counts > 0  # (B, nb)
@@ -397,6 +423,18 @@ def mra2_chunk_attention(
     allowed, own = sel.allowed, sel.ownl
 
     c = jnp.maximum(jnp.max(coarse_m, axis=-1), NEG_INF * 0.5)  # (B,Hkv,G,C)
+    up = pre.upper
+    if up is not None and cfg.variant == "full":
+        # Collapsed levels + tail (DESIGN.md §14): score the per-entry means.
+        # Entries hold only *evicted* (strictly past) tokens, so there is no
+        # causal mask — liveness (count > 0) is the only gate. Their maxima
+        # join the row stabilizer: collapsed history can dominate the live
+        # window, and the background exp must not overflow.
+        hlive = (up.counts > 0)[:, None, None, None, :]  # (B,1,1,1,NU)
+        hmu = jnp.einsum(
+            "bhgcd,bhyd->bhgcy", qg, up.k_mean.astype(cdt)) * scale
+        hmu = jnp.where(hlive, hmu, NEG_INF)
+        c = jnp.maximum(c, jnp.max(hmu, axis=-1))
 
     # ---- exact term over selected pages ------------------------------------
     k_blocks = k_cache.reshape(B, Hkv, nb, b, D)[:, :, None, None]
@@ -435,10 +473,45 @@ def mra2_chunk_attention(
             (y_idx[..., None] == jnp.arange(nb)) & sel_ok[..., None], axis=-2
         )  # (B,Hkv,G,C,nb)
         bg = allowed & ~own & ~sel_grid
+        if cfg.draft_level > 1:
+            # Coarser far field (DESIGN.md §14): fold the background over
+            # groups of 2^(draft_level-1) physically adjacent ring pages. A
+            # group is aggregated only when *every* member is a background
+            # page (all live, causal, unselected) — the group mean is then a
+            # count-weighted convex combination of member means, so its
+            # score never exceeds the row stabilizer. Mixed groups (own /
+            # selected / partial pages near the ring head) fall back to the
+            # per-page background below.
+            gsz = 1 << (cfg.draft_level - 1)
+            if nb % gsz:
+                raise ValueError(
+                    f"draft_level={cfg.draft_level} aggregates the "
+                    f"background over {gsz}-page groups, but nb={nb} pages "
+                    f"do not divide evenly")
+            ng = nb // gsz
+            grp = bg.reshape(*bg.shape[:-1], ng, gsz).all(axis=-1)
+            cnt_g = counts.reshape(B, ng, gsz).sum(axis=-1)  # (B, ng)
+            den_g = jnp.maximum(cnt_g, 1.0)[:, None, :, None]
+            kmean_g = (pre.k_ds * counts[:, None, :, None]).reshape(
+                B, Hkv, ng, gsz, D).sum(axis=3) / den_g
+            vmean_g = (v_ds * counts[:, None, :, None]).reshape(
+                B, Hkv, ng, gsz, D).sum(axis=3) / den_g
+            mu_g = jnp.einsum("bhgcd,bhyd->bhgcy", qg, kmean_g) * scale
+            wg = jnp.where(grp, jnp.exp(mu_g - c[..., None]), 0.0)
+            wg = wg * cnt_g[:, None, None, None, :] * adj[..., None]
+            out = out + jnp.einsum("bhgcy,bhyd->bhgcd", wg, vmean_g)
+            rs = rs + jnp.sum(wg, axis=-1)
+            bg = bg & ~jnp.repeat(grp, gsz, axis=-1)
         w = jnp.where(bg, jnp.exp(coarse_m - c[..., None]), 0.0)
         w = w * counts[:, None, None, None, :] * adj[..., None]
         out = out + jnp.einsum("bhgcy,bhyd->bhgcd", w, v_ds)
         rs = rs + jnp.sum(w, axis=-1)
+        if up is not None:
+            wh = jnp.where(hlive, jnp.exp(hmu - c[..., None]), 0.0)
+            wh = wh * up.counts[:, None, None, None, :] * adj[..., None]
+            out = out + jnp.einsum(
+                "bhgcy,bhyd->bhgcd", wh, up.v_mean.astype(cdt))
+            rs = rs + jnp.sum(wh, axis=-1)
 
     alive = rs > 0
     out = jnp.where(alive[..., None], out, 0.0) / jnp.where(alive, rs, 1.0)[..., None]

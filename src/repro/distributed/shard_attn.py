@@ -146,6 +146,16 @@ def _sharded_kv_attention(q, k_cache, v_cache, lengths, spec, *, q_pos=None,
     if pyramid is not None:
         args["pk"], args["pv"] = pyramid.k_sum, pyramid.v_sum
         in_specs["pk"] = in_specs["pv"] = s4
+        if pyramid.upper is not None:
+            # H-level hierarchy (DESIGN.md §14): the collapsed-level + tail
+            # means carry the same (batch, kv_heads, ...) leading axes as
+            # the pyramid; entry counts shard over batch only (shared by
+            # every kv head, like the page table).
+            args["uk"] = pyramid.upper.k_mean
+            args["uv"] = pyramid.upper.v_mean
+            args["uc"] = pyramid.upper.counts
+            in_specs["uk"] = in_specs["uv"] = s4
+            in_specs["uc"] = P(bpart, None)
     if page_blocks is not None:
         args["pb"] = page_blocks
         in_specs["pb"] = P(bpart, None)
@@ -155,9 +165,13 @@ def _sharded_kv_attention(q, k_cache, v_cache, lengths, spec, *, q_pos=None,
 
     def body(a):
         from repro.core.attention import chunk_attention, decode_attention
+        from repro.core.hier import HierUpper
         from repro.core.mra_decode import PyramidState
 
-        pyr = PyramidState(a["pk"], a["pv"]) if "pk" in a else None
+        upper = (HierUpper(a["uk"], a["uv"], a["uc"])
+                 if "uk" in a else None)
+        pyr = (PyramidState(a["pk"], a["pv"], upper)
+               if "pk" in a else None)
         kw = dict(pyramid=pyr, page_blocks=a.get("pb"), k_scale=a.get("ks"),
                   v_scale=a.get("vs"))
         if "qp" in a:

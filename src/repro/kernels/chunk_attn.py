@@ -30,6 +30,14 @@ background and the final normalization — runs *inside one kernel*:
     against the resident ``v_ds`` tile, aligned onto the two-level
     stabilizer ``c_tok = max(c, fine_max)``; the normalized output is
     emitted directly (all-masked rows → exact zeros).
+  * H-level far field (DESIGN.md §14) — when the cache is hierarchical
+    (``levels >= 3``), the collapsed-level + tail means arrive as two more
+    resident ``(NU, D)`` tiles with an (NU,) count row; the fold is one
+    extra ``(rows, NU)`` score matmul + ``(rows, NU) @ (NU, D)`` background
+    matmul inside the same stabilizer. Selection stays in-kernel and
+    untouched — the hierarchy only widens the background. At levels == 2
+    the operands are static dummies and the fold is compiled out, keeping
+    the two-level program identical.
 
 Dual mode (DESIGN.md §11): the same body is instantiated at two static
 query-tile widths, selected per dispatch —
@@ -90,6 +98,10 @@ def _chunk_kernel(
     vds_ref,     # (1, nb, D) per-page V means (coarse background values)
     counts_ref,  # (1, nb) f32 valid tokens per page
     pb_ref,      # (1, nb) int32 page table row (logical block, -1 dead)
+    hk_ref,      # (1, NU, D) f32 collapsed-level + tail K means (§14);
+                 # (1, 1, D) zero dummy when with_upper is False
+    hv_ref,      # (1, NU, D) f32 collapsed-level + tail V means
+    hcnt_ref,    # (1, NU) f32 per-entry token counts (0 = dead entry)
     # ANY-space refs (manual DMA sources)
     k_any,       # (BKV, nb, b, D) cache dtype
     v_any,       # (BKV, nb, b, D)
@@ -112,6 +124,7 @@ def _chunk_kernel(
     m: int,
     quant: bool,
     include_bg: bool,
+    with_upper: bool,
 ):
     r = pl.program_id(0)
     b = block_size
@@ -205,6 +218,15 @@ def _chunk_kernel(
 
     # ---- background + two-level stabilizer + normalize ---------------------
     c = jnp.maximum(jnp.max(coarse_m, axis=1, keepdims=True), NEG_INF * 0.5)
+    if include_bg and with_upper:
+        # H-level hierarchy (DESIGN.md §14): score the resident collapsed-
+        # level + tail means. Entries hold only evicted (strictly past)
+        # tokens — liveness is the one gate — and their maxima join the row
+        # stabilizer before any exp: far history can dominate the window.
+        hmu = _dot(q, hk_ref[0], ((1,), (1,))) * scale   # (rows, NU)
+        hlive = hcnt_ref[...] > 0.0                      # (1, NU)
+        hmu = jnp.where(hlive, hmu, NEG_INF)
+        c = jnp.maximum(c, jnp.max(hmu, axis=1, keepdims=True))
     mt = mt_ref[...]
     c_tok = jnp.maximum(c, mt)                    # two-level stabilizer
     fine_adj = jnp.exp(mt - c_tok)                # mt ≤ c_tok, so ≤ 1
@@ -217,6 +239,10 @@ def _chunk_kernel(
         vds = vds_ref[0]                          # (nb, D)
         out = out + adj * _dot(w, vds, ((1,), (0,)))   # (rows, nb)@(nb, D)
         rs = rs + adj * jnp.sum(w, axis=1, keepdims=True)
+        if with_upper:
+            wh = jnp.where(hlive, jnp.exp(hmu - c), 0.0) * hcnt_ref[...]
+            out = out + adj * _dot(wh, hv_ref[0], ((1,), (0,)))
+            rs = rs + adj * jnp.sum(wh, axis=1, keepdims=True)
     alive = rs > 0.0
     o = jnp.where(alive, out, 0.0) / jnp.where(alive, rs, 1.0)
     o_ref[0] = o.reshape(G, Ct, D)
@@ -229,27 +255,37 @@ def _no_grad(*args, **kw):
 
 
 @functools.partial(
-    jax.custom_jvp, nondiff_argnums=(10, 11, 12, 13, 14, 15, 16))
+    jax.custom_jvp, nondiff_argnums=(13, 14, 15, 16, 17, 18, 19, 20))
 def _chunk_attention_call(
-    q4, qpos4, kds3, vds3, counts2, pb2, k4, v4, ks4, vs4,
-    scale, block_size, m, c_tile, quant, include_bg, interpret,
+    q4, qpos4, kds3, vds3, counts2, pb2, hk3, hv3, hcnt2, k4, v4, ks4, vs4,
+    scale, block_size, m, c_tile, quant, include_bg, with_upper, interpret,
 ):
     """pallas_call entry. q4 (BKV, G, Cp, D) fp32; qpos4 (BKV, G, Cp, 1)
     int32 (−1 = padded row); kds3/vds3 (BKV, nb, D) fp32; counts2/pb2
-    (B, nb); k4/v4 (BKV, nb, b, D) cache dtype; ks4/vs4 (BKV, nb, b, 1)
-    fp32 scales ((1, 1, 1, 1) dummies when not ``quant``). ``Cp`` must be a
-    multiple of the static query-tile width ``c_tile``."""
+    (B, nb); hk3/hv3 (BKV, NU, D) fp32 collapsed-level + tail means with
+    hcnt2 (B, NU) counts when ``with_upper`` (zero (1, 1, D)/(1, 1) dummies
+    otherwise — the fold is statically skipped); k4/v4 (BKV, nb, b, D)
+    cache dtype; ks4/vs4 (BKV, nb, b, 1) fp32 scales ((1, 1, 1, 1) dummies
+    when not ``quant``). ``Cp`` must be a multiple of the static query-tile
+    width ``c_tile``."""
     BKV, G, Cp, D = q4.shape
     nb, b = k4.shape[1], k4.shape[2]
     B = counts2.shape[0]
     hkv = BKV // B
     rows = G * c_tile
+    nu = hk3.shape[1]
 
     kernel = functools.partial(
         _chunk_kernel, scale=scale, block_size=b, m=m, quant=quant,
-        include_bg=include_bg)
+        include_bg=include_bg, with_upper=with_upper)
     grid = (BKV, Cp // c_tile)
     any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    if with_upper:  # resident tiles, one row per (batch·kv-head) like kds
+        hmean_spec = pl.BlockSpec((1, nu, D), lambda r, t: (r, 0, 0))
+        hcnt_spec = pl.BlockSpec((1, nu), lambda r, t: (r // hkv, 0))
+    else:  # single shared dummy tile, never read
+        hmean_spec = pl.BlockSpec((1, 1, D), lambda r, t: (0, 0, 0))
+        hcnt_spec = pl.BlockSpec((1, 1), lambda r, t: (0, 0))
     out = pl.pallas_call(
         kernel,
         grid=grid,
@@ -260,6 +296,9 @@ def _chunk_attention_call(
             pl.BlockSpec((1, nb, D), lambda r, t: (r, 0, 0)),
             pl.BlockSpec((1, nb), lambda r, t: (r // hkv, 0)),
             pl.BlockSpec((1, nb), lambda r, t: (r // hkv, 0)),
+            hmean_spec,
+            hmean_spec,
+            hcnt_spec,
             any_spec,  # K pages: fetched by explicit per-page DMA
             any_spec,
             any_spec,
@@ -283,7 +322,7 @@ def _chunk_attention_call(
             # chunk-tile axis stays sequential to keep kds/vds tiles resident
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(q4, qpos4, kds3, vds3, counts2, pb2, k4, v4, ks4, vs4)
+    )(q4, qpos4, kds3, vds3, counts2, pb2, hk3, hv3, hcnt2, k4, v4, ks4, vs4)
     return out
 
 
@@ -353,9 +392,20 @@ def chunk_attention_kernel(
     vds3 = pre.v_ds.astype(jnp.float32).reshape(BKV, nb, D)
     counts2 = pre.counts.astype(jnp.float32)
     pb2 = pre.pb.astype(jnp.int32)
+    with_upper = pre.upper is not None
+    if with_upper:  # H-level hierarchy (§14): levels + tail as resident tiles
+        nu = pre.upper.k_mean.shape[2]
+        hk3 = pre.upper.k_mean.astype(jnp.float32).reshape(BKV, nu, D)
+        hv3 = pre.upper.v_mean.astype(jnp.float32).reshape(BKV, nu, D)
+        hcnt2 = pre.upper.counts.astype(jnp.float32)
+    else:  # dummy tiles keep the arity static; the fold is compiled out
+        hk3 = jnp.zeros((1, 1, D), jnp.float32)
+        hv3 = hk3
+        hcnt2 = jnp.zeros((1, 1), jnp.float32)
 
     out = _chunk_attention_call(
-        q4, qpos4, kds3, vds3, counts2, pb2, k4, v4, ks4, vs4,
-        pre.scale, b, m, c_tile, quant, include_bg, interpret,
+        q4, qpos4, kds3, vds3, counts2, pb2, hk3, hv3, hcnt2, k4, v4, ks4,
+        vs4, pre.scale, b, m, c_tile, quant, include_bg, with_upper,
+        interpret,
     )
     return out[:, :, :C].reshape(B, Hkv * G, C, D)

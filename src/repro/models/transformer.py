@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import hier
 from repro.core.attention import chunk_attention, decode_attention, self_attention
 from repro.core.mra_decode import PyramidState
 from . import layers as L
@@ -208,6 +209,38 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
         # (DESIGN.md §9) instead of overflowing.
         c["page_blocks"] = ParamSpec((batch, nb), ("batch", None),
                                      dtype=jnp.int32, init="fill", scale=-1)
+        if cfg.attention.levels >= 3:
+            # H-level pyramid (core/hier.py, DESIGN.md §14): collapsed rings
+            # over *evicted* history. Per level: int8 per-entry means (int4
+            # precision via the clip range at levels >= 3) + fp32 scales per
+            # layer; the owner/count tables are shared across layers exactly
+            # like page_blocks (every layer evicts the same blocks). The
+            # fp32 tail absorbs history past the top level. At levels == 2
+            # none of these keys exist and the cache tree is byte-identical
+            # to the two-level scheme.
+            n = cfg.attention.hier_pages or nb
+            hmean = ParamSpec((batch, Hkv, n, hd),
+                              ("batch", "kv_heads", None, None),
+                              dtype=jnp.int8, init="zeros")
+            hscale = ParamSpec((batch, Hkv, n), ("batch", "kv_heads", None),
+                               dtype=jnp.float32, init="zeros")
+            for lvl in range(2, cfg.attention.levels):
+                c[f"hier_k{lvl}"] = [hmean for _ in range(Lx)]
+                c[f"hier_v{lvl}"] = [hmean for _ in range(Lx)]
+                c[f"hier_ks{lvl}"] = [hscale for _ in range(Lx)]
+                c[f"hier_vs{lvl}"] = [hscale for _ in range(Lx)]
+                c[f"hier_own{lvl}"] = ParamSpec(
+                    (batch, n), ("batch", None), dtype=jnp.int32,
+                    init="fill", scale=-1)
+                c[f"hier_cnt{lvl}"] = ParamSpec(
+                    (batch, n), ("batch", None), dtype=jnp.int32,
+                    init="zeros")
+            tail = ParamSpec((batch, Hkv, hd), ("batch", "kv_heads", None),
+                             dtype=jnp.float32, init="zeros")
+            c["tail_k"] = [tail for _ in range(Lx)]
+            c["tail_v"] = [tail for _ in range(Lx)]
+            c["tail_cnt"] = ParamSpec((batch,), ("batch",), dtype=jnp.int32,
+                                      init="zeros")
     return c
 
 
@@ -334,6 +367,32 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, num_valid, *,
         m = tv_kv if vt.ndim == 4 else tv[:, :, None]
         return arr.at[b_idx2, :, widx].set(jnp.where(m, vt, old))
 
+    hplans = []
+    if paged and hier.has_hier(cache):
+        # H-level collapse (DESIGN.md §14), plan phase: which pages this
+        # chunk recycles and where their evicted owners land in the
+        # hierarchy depends only on the shared tables + positions, so the
+        # carry chains run ONCE here; each layer replays the same plans on
+        # its own sums inside the loop. Evictions are processed
+        # oldest-block-first — the order sequential decode would use — so
+        # cascades into higher levels match one-token-at-a-time collapse
+        # exactly (the spec-rewind replay and the order-invariance property
+        # test both pin this).
+        npages = cache["page_blocks"].shape[1]
+        page_c = (positions // bs) % npages
+        startm = ((positions % bs) == 0) & tv
+        fresh_pages = jnp.any(
+            (page_c[:, :, None] == jnp.arange(npages)) & startm[:, :, None],
+            axis=1)
+        ht = dict(cache)
+        child_cnt = jnp.full((B,), bs, jnp.int32)
+        for blk_j, on_j in hier.eviction_schedule(
+                cache["page_blocks"], fresh_pages, C // bs + 1):
+            tupd, plan = hier.cache_collapse_tables(ht, blk_j, child_cnt, on_j)
+            ht.update(tupd)
+            new_cache.update(tupd)
+            hplans.append((plan, blk_j % npages))
+
     chunk_k, chunk_v = [], []
     for i, p in enumerate(_layers_iter(params, cfg)):
         h = L.apply_norm(x, p["ln1"], cfg)
@@ -372,6 +431,17 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, num_valid, *,
             ind = ind.astype(jnp.float32)
             base_k, base_v = new_cache["pyr_k"][i], new_cache["pyr_v"][i]
             if paged:
+                # H-level collapse, value phase: the evicted owners' sums
+                # (still intact in base_k/base_v) carry up the hierarchy
+                # before the fresh-zeroing below drops them from the fine
+                # pyramid. No-op list when the cache is two-level.
+                for plan, pg_j in hplans:
+                    hier.cache_store_layer(
+                        new_cache, i,
+                        hier.cache_collapse_layer(
+                            new_cache, i, plan,
+                            base_k[jnp.arange(B), :, pg_j],
+                            base_v[jnp.arange(B), :, pg_j]))
                 # ring recycle (the chunked analogue of ring_pyramid_update's
                 # keep mask): a chunk token that *starts* a new block evicts
                 # the page's previous owner — drop its sums before adding.
@@ -389,7 +459,7 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, num_valid, *,
             new_cache["pyr_v"] = list(new_cache["pyr_v"])
             new_cache["pyr_k"][i] = pk
             new_cache["pyr_v"][i] = pv
-            pyramid = PyramidState(pk, pv)
+            pyramid = PyramidState(pk, pv, hier.cache_upper_view(new_cache, i))
             if i == 0 and paged:  # page table is shared across layers
                 touched = jnp.any(ind > 0, axis=1)  # (B, npages)
                 blk_new = jnp.max(
@@ -444,6 +514,22 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, active=None):
     pos = lengths - 1  # the new token's global position (active slots)
     am2 = act[:, None]          # (B, 1)
     am3 = act[:, None, None]    # (B, 1, 1)
+    hplan = page_e = None
+    if paged and hier.has_hier(cache):
+        # H-level collapse (DESIGN.md §14), plan phase: a token that starts
+        # a new block recycles its ring page — the page's previous owner
+        # carries into the hierarchy. The shared tables update once here
+        # (like page_blocks); every layer replays the plan on its own sums
+        # below, reading the evicted sums from its pyramid *before*
+        # ring_pyramid_update zeroes them.
+        bs0 = cfg.attention.block_size
+        npages = cache["page_blocks"].shape[1]
+        page_e = (pos // bs0) % npages
+        old_owner = cache["page_blocks"][b_idx, page_e]
+        evict = act & ((pos % bs0) == 0) & (old_owner >= 0)
+        tupd, hplan = hier.cache_collapse_tables(
+            cache, old_owner, jnp.full((B,), bs0, jnp.int32), evict)
+        new_cache.update(tupd)
     for i, p in enumerate(_layers_iter(params, cfg)):
         h = L.apply_norm(x, p["ln1"], cfg)
         q, k_new, v_new = L.qkv_project(h, p["attn"], cfg, pos[:, None])
@@ -482,10 +568,20 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, active=None):
             bs = cfg.attention.block_size
             pb = new_cache["page_blocks"] if paged else None
             if paged:
+                if hplan is not None:  # H-level collapse, value phase (§14)
+                    hier.cache_store_layer(
+                        new_cache, i,
+                        hier.cache_collapse_layer(
+                            new_cache, i, hplan,
+                            new_cache["pyr_k"][i][b_idx, :, page_e],
+                            new_cache["pyr_v"][i][b_idx, :, page_e]))
                 pyramid, pb = ring_pyramid_update(
                     PyramidState(new_cache["pyr_k"][i], new_cache["pyr_v"][i]),
                     pb, k_new[:, :, 0], v_new[:, :, 0], pos, bs, active=act)
                 new_cache["page_blocks"] = pb
+                pyramid = PyramidState(
+                    pyramid.k_sum, pyramid.v_sum,
+                    hier.cache_upper_view(new_cache, i))
             else:
                 blk = pos // bs
                 contrib_k = jnp.where(am3, k_new[:, :, 0].astype(jnp.float32), 0.0)

@@ -28,6 +28,17 @@ is undone, and the pyramid is rebuilt as snapshot + the accepted prefix's
 exact fp32 contributions (replayed from the verify chunk's K/V, not from
 possibly-quantized cache bytes). Cost is O(W) per slot per round,
 independent of the stream length — speculation never copies the cache.
+
+H-level hierarchy (``cfg.attention.levels >= 3``, core/hier.py, DESIGN.md
+§14): ring eviction becomes *collapse-up* — a recycled page's pyramid sums
+merge into coarser per-level entry rings (int8 near, int4-precision far)
+and ultimately a fp32 tail, so the cache serves contexts far longer than
+its fine window from bounded memory. ``capacity`` is then None (admission
+unbounded; long prompts stream through chunked prefill, collapsing as they
+go), ``window_tokens`` keeps the fine-window size for the speculative
+boundary rule, ``occupancy()`` grows per-level gauges, and the snapshot/
+rewind pair restores collapsed sums exactly (wholesale restore + replay of
+the kept writes' collapses).
 """
 from __future__ import annotations
 
@@ -48,12 +59,15 @@ __all__ = ["RingPagedKVCache", "quantize_kv"]
 
 
 @functools.lru_cache(maxsize=None)
-def _make_reset(paged: bool):
+def _make_reset(paged: bool, hier_lids: tuple = ()):
     """Jitted bit-exact slot reset: zero the rows selected by ``mask``.
 
     Only the *validity* state is cleared (lengths, page table, pyramid block
-    sums); stale K/V bytes are unreachable once no live page maps to them, so
-    they are left in place — same trick as the dense path's length masking.
+    sums, and — when hierarchical, DESIGN.md §14 — the collapsed-level
+    owner/count tables and the fp32 tail); stale K/V bytes and stale
+    collapsed-entry payloads/scales are unreachable once no live page /
+    entry count points at them, so they are left in place — same trick as
+    the dense path's length masking.
     """
 
     def reset(cache, mask):
@@ -66,6 +80,16 @@ def _make_reset(paged: bool):
             m4 = mask[:, None, None, None]
             c["pyr_k"] = [jnp.where(m4, 0.0, a) for a in cache["pyr_k"]]
             c["pyr_v"] = [jnp.where(m4, 0.0, a) for a in cache["pyr_v"]]
+        for lvl in hier_lids:
+            c[f"hier_own{lvl}"] = jnp.where(
+                mask[:, None], jnp.int32(-1), cache[f"hier_own{lvl}"])
+            c[f"hier_cnt{lvl}"] = jnp.where(
+                mask[:, None], 0, cache[f"hier_cnt{lvl}"])
+        if hier_lids:
+            m3 = mask[:, None, None]
+            c["tail_k"] = [jnp.where(m3, 0.0, a) for a in cache["tail_k"]]
+            c["tail_v"] = [jnp.where(m3, 0.0, a) for a in cache["tail_v"]]
+            c["tail_cnt"] = jnp.where(mask, 0, cache["tail_cnt"])
         return c
 
     return jax.jit(reset)
@@ -80,11 +104,14 @@ def _window_indices(lengths, W: int, S: int):
 
 
 @functools.lru_cache(maxsize=None)
-def _make_spec_fns(W: int, block: int, quant: bool):
+def _make_spec_fns(W: int, block: int, quant: bool, hier_lids: tuple = ()):
     """Jitted (window gather, ring rewind) for a W-token speculative window.
 
     Cached on the static window shape; the cache tree itself rides through
     as a pytree argument so every Engine/config shares compiled code per W.
+    ``hier_lids`` names the collapsed levels of an H-level cache (§14): the
+    rewind then also restores the hierarchy to its snapshot exactly and
+    replays the collapses that the *kept* writes performed.
     """
 
     def gather(cache):
@@ -162,6 +189,51 @@ def _make_spec_fns(W: int, block: int, quant: bool):
             pyr_k.append(jnp.where(n4, base_k, cache["pyr_k"][li]))
             pyr_v.append(jnp.where(n4, base_v, cache["pyr_v"][li]))
         c["pyr_k"], c["pyr_v"] = pyr_k, pyr_v
+        if hier_lids:
+            # H-level hierarchy (§14): collapses performed during the round
+            # folded evicted sums into shared tables and per-layer entries.
+            # Restore the whole hierarchy to the snapshot for ``need``
+            # slots, then replay exactly the collapses the *kept* writes
+            # perform — evicted owners come from the snapshot page table at
+            # the pages the kept prefix recycled (``fresh``), their sums
+            # from the snapshot pyramid; ascending-block order matches
+            # sequential decode, so the result is bit-identical to having
+            # never speculated.
+            from repro.core import hier
+
+            n2, n3 = need[:, None], need[:, None, None]
+            for lvl in hier_lids:
+                c[f"hier_own{lvl}"] = jnp.where(
+                    n2, snap[f"hier_own{lvl}"], cache[f"hier_own{lvl}"])
+                c[f"hier_cnt{lvl}"] = jnp.where(
+                    n2, snap[f"hier_cnt{lvl}"], cache[f"hier_cnt{lvl}"])
+                for pre, m in (("hier_k", n4), ("hier_v", n4),
+                               ("hier_ks", n3), ("hier_vs", n3)):
+                    key = f"{pre}{lvl}"
+                    c[key] = [jnp.where(m, s, a)
+                              for a, s in zip(cache[key], snap[key])]
+            c["tail_k"] = [jnp.where(n3, s, a)
+                           for a, s in zip(cache["tail_k"], snap["tail_k"])]
+            c["tail_v"] = [jnp.where(n3, s, a)
+                           for a, s in zip(cache["tail_v"], snap["tail_v"])]
+            c["tail_cnt"] = jnp.where(need, snap["tail_cnt"],
+                                      cache["tail_cnt"])
+            evicted = fresh & (snap["page_blocks"] >= 0)
+            b1 = jnp.arange(need.shape[0])
+            child_cnt = jnp.full(need.shape, block, jnp.int32)
+            for blk_j, on_j in hier.eviction_schedule(
+                    snap["page_blocks"], evicted, W // block + 1):
+                tupd, plan = hier.cache_collapse_tables(
+                    c, blk_j, child_cnt, on_j)
+                c.update(tupd)
+                pg = blk_j % npages
+                for li in range(len(c["pyr_k"])):
+                    hier.cache_store_layer(
+                        c, li,
+                        hier.cache_collapse_layer(
+                            c, li, plan,
+                            snap["pyr_k"][li][b1, :, pg],
+                            snap["pyr_v"][li][b1, :, pg]))
         return c
 
     return jax.jit(gather), jax.jit(rewind)
@@ -191,11 +263,25 @@ class RingPagedKVCache(CacheBackend):
         self.block = cfg.attention.block_size if self.paged else None
         self.pages = max_len // cfg.attention.block_size if self.paged else None
         self.quantized = "k_scale" in self.specs
+        # H-level hierarchy (DESIGN.md §14): the fine ring stays max_len
+        # tokens (window_tokens), but evicted pages collapse up into the
+        # hier_*/tail_* levels instead of being dropped, so the *logical*
+        # context is unbounded — admission is not capped by the fine window
+        # (capacity None, the StateCache precedent: arbitrarily long prompts
+        # stream through chunked prefill). Chunks stay one block short of
+        # the window (chunk_cap) so every token a chunk collapses is
+        # strictly older than every query in that chunk.
+        self.levels = cfg.attention.levels if self.paged else 2
+        self.hier_lids = tuple(range(2, self.levels)) if self.paged else ()
+        self.window_tokens = max_len
+        if self.hier_lids:
+            self.capacity = None
+            self.chunk_cap = max_len - self.block
         self.tree = init_params(self.specs, jax.random.PRNGKey(0))
         if mesh is not None:
             self.tree = jax.tree.map(
                 jax.device_put, self.tree, param_shardings(self.specs, mesh))
-        self._reset = _make_reset(self.paged)
+        self._reset = _make_reset(self.paged, self.hier_lids)
 
     def reset_slots(self, mask: np.ndarray):
         """Clear the slots selected by ``mask`` (B,) bool for re-admission."""
@@ -214,9 +300,10 @@ class RingPagedKVCache(CacheBackend):
             raise NotImplementedError(
                 "speculative rounds need the ring-paged MRA cache "
                 "(pyramid pages are the draft model)")
-        gather, _ = _make_spec_fns(window, self.block, self.quantized)
+        gather, _ = _make_spec_fns(window, self.block, self.quantized,
+                                   self.hier_lids)
         t = self.tree
-        return {
+        snap = {
             "lengths": t["lengths"],
             "page_blocks": t["page_blocks"],
             "pyr_k": list(t["pyr_k"]),
@@ -224,10 +311,21 @@ class RingPagedKVCache(CacheBackend):
             "win": gather(t),
             "window": window,
         }
+        for lvl in self.hier_lids:  # §14: by reference, like the pyramid
+            for pre in ("hier_own", "hier_cnt"):
+                snap[f"{pre}{lvl}"] = t[f"{pre}{lvl}"]
+            for pre in ("hier_k", "hier_v", "hier_ks", "hier_vs"):
+                snap[f"{pre}{lvl}"] = list(t[f"{pre}{lvl}"])
+        if self.hier_lids:
+            snap["tail_k"] = list(t["tail_k"])
+            snap["tail_v"] = list(t["tail_v"])
+            snap["tail_cnt"] = t["tail_cnt"]
+        return snap
 
     def spec_rewind(self, snap, target_lengths, gate, chunk_kv=None):
         """Rewind ``gate`` slots to ``target_lengths`` (see _make_spec_fns)."""
-        _, rewind = _make_spec_fns(snap["window"], self.block, self.quantized)
+        _, rewind = _make_spec_fns(snap["window"], self.block, self.quantized,
+                                   self.hier_lids)
         self.tree = rewind(self.tree, {k: v for k, v in snap.items()
                                        if k != "window"},
                            target_lengths, gate, chunk_kv)
@@ -256,6 +354,15 @@ class RingPagedKVCache(CacheBackend):
             occ["tokens_live"] = float((lengths - start).sum())
             occ["pages_live"] = float(self.live_pages().sum())
             occ["tokens_evicted"] = float(start.sum())
+        for lvl in self.hier_lids:
+            # per-level gauges (§14): with a hierarchical cache, "evicted"
+            # tokens are not dropped — they live on in collapsed entries
+            # (level{l}_tokens) and ultimately the tail (tail_tokens).
+            cnt = np.asarray(self.tree[f"hier_cnt{lvl}"])
+            occ[f"level{lvl}_entries"] = float((cnt > 0).sum())
+            occ[f"level{lvl}_tokens"] = float(cnt.sum())
+        if self.hier_lids:
+            occ["tail_tokens"] = float(np.asarray(self.tree["tail_cnt"]).sum())
         return occ
 
     def live_pages(self) -> Optional[np.ndarray]:

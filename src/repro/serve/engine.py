@@ -81,6 +81,11 @@ class EngineConfig:
     spec_k: speculative draft length (0 = plain decode); requires an MRA
       attention kind and the paged cache backend, and ``spec_k + 1 <=
       max_len``.
+    draft_level: resolution the speculative draft reads the background at
+      (DESIGN.md §14). 1 (default) is the per-page coarse draft; level d > 1
+      folds groups of 2^(d-1) adjacent pages through their merged mean —
+      cheaper draft attention, unchanged output distribution (verify is
+      always full-MRA). Requires ``decode_blocks % 2^(d-1) == 0``.
     mesh: jax device mesh for tensor-parallel serving (None = single device).
     default_sampling: sampler settings applied to requests submitted with
       ``sampling=None`` (None = greedy).
@@ -105,6 +110,7 @@ class EngineConfig:
     max_len: int = 512
     chunk: int = 32
     spec_k: int = 0
+    draft_level: int = 1
     mesh: Optional[object] = None
     default_sampling: Optional[SamplingParams] = None
     kernel_mode: str = "auto"
@@ -225,7 +231,8 @@ class Engine:
                 raise ValueError(
                     f"spec_k {self.spec_k} + 1 exceeds the cache window "
                     f"{self.max_len}")
-            self._spec = SpecDecoder(cfg, self.spec_k)
+            self._spec = SpecDecoder(cfg, self.spec_k,
+                                     draft_level=config.draft_level)
             if not self.kv.supports_spec:
                 raise NotImplementedError(
                     "speculative decoding needs the ring-paged MRA cache "
@@ -271,11 +278,14 @@ class Engine:
             "verify_seconds", "ttft_seconds", "queue_wait_seconds",
             "prefill_seconds", "inter_token_seconds",
             "spec_accepted_per_round")
-        # occupancy gauges, refreshed once per engine iteration
+        # occupancy gauges, refreshed once per engine iteration; the cache
+        # keys come from the backend itself (set_occupancy prefixes them
+        # with "cache_") so backends with extra gauges — e.g. the H-level
+        # cache's per-level entry/token counts (DESIGN.md §14) — declare
+        # them without the engine enumerating every backend's set
         m.declare_gauge(
             "queue_depth", "slots_free", "slots_prefill", "slots_decode",
-            "cache_slots_active", "cache_tokens_live", "cache_pages_live",
-            "cache_tokens_evicted")
+            *("cache_" + k for k in self.kv.occupancy()))
         m.declare_series("spec_accept_by_slot")
         self.telemetry = tel
 

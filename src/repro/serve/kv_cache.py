@@ -8,6 +8,13 @@ names so existing callers keep working.
 """
 from __future__ import annotations
 
+import warnings
+
 from .cache.paged import RingPagedKVCache, quantize_kv
+
+warnings.warn(
+    "repro.serve.kv_cache is deprecated; import RingPagedKVCache / "
+    "quantize_kv from repro.serve.cache instead (DESIGN.md §12)",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["RingPagedKVCache", "quantize_kv"]

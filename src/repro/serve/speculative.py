@@ -46,23 +46,34 @@ from .sampling import draft_batch, greedy_batch, spec_verify_batch
 __all__ = ["SpecDecoder", "draft_config"]
 
 
-def draft_config(cfg: ModelConfig) -> ModelConfig:
-    """The draft model IS the target model under coarse-only attention."""
-    return cfg.replace(attention=cfg.attention.replace(coarse_only=True))
+def draft_config(cfg: ModelConfig, draft_level: int = 1) -> ModelConfig:
+    """The draft model IS the target model under coarse-only attention.
+
+    ``draft_level`` > 1 coarsens the draft's background one more rung
+    (DESIGN.md §14): eligible groups of 2^(draft_level-1) adjacent pages
+    fold through their merged mean instead of per-page means. The grouped
+    fold only exists on the jnp route, so it forces ``use_kernel`` off for
+    draft dispatches (verify dispatches keep the target config untouched).
+    """
+    attn = cfg.attention.replace(coarse_only=True, draft_level=draft_level)
+    if draft_level > 1:
+        attn = attn.replace(use_kernel=False)
+    return cfg.replace(attention=attn)
 
 
 @functools.lru_cache(maxsize=None)
-def _make_spec_fns(cfg: ModelConfig):
-    """Jitted (draft_step, verify, accept) for a config.
+def _make_spec_fns(cfg: ModelConfig, draft_level: int = 1):
+    """Jitted (draft_step, verify, accept) for a (config, draft_level).
 
     Cached on the (frozen, hashable) ModelConfig like the engine's own fns
     so every Engine instance shares compiled executables. None of the
     wrappers closes over the draft length K — draft steps are single-token
     and verify/accept retrace per chunk shape under jit — so engines that
-    differ only in ``spec_k`` share them too.
+    differ only in ``spec_k`` share them too. ``draft_level`` changes the
+    draft dispatch's traced program, so it is part of the cache key.
     """
     model = get_model(cfg)
-    dcfg = draft_config(cfg)
+    dcfg = draft_config(cfg, draft_level)
 
     scope = f"serve.{cfg.family}.spec"  # profiler grouping (DESIGN.md §13)
 
@@ -98,34 +109,38 @@ def _make_spec_fns(cfg: ModelConfig):
 class SpecDecoder:
     """Drives one speculative round per engine iteration (Engine.spec_k)."""
 
-    def __init__(self, cfg: ModelConfig, spec_k: int):
+    def __init__(self, cfg: ModelConfig, spec_k: int, draft_level: int = 1):
         if cfg.attention.kind not in ("mra2", "mra2_s"):
             raise NotImplementedError(
                 "speculative decoding drafts through the MRA pyramid; "
                 f"attention kind {cfg.attention.kind!r} has no coarse level")
         assert spec_k >= 1
+        assert draft_level >= 1
         self.cfg = cfg
         self.k = spec_k
-        self._draft, self._verify, self._accept = _make_spec_fns(cfg)
+        self._draft, self._verify, self._accept = _make_spec_fns(
+            cfg, draft_level)
 
     def split_wave(self, kv, active: np.ndarray):
         """(speculable, plain) split of the decode wave.
 
         A slot is speculable when its round window (L0, L0 + K] contains no
-        ring-eviction boundary (a block start at position >= capacity): a
-        chunked verify writes the whole window before attending, so a
-        boundary strictly inside it would evict a block that the window's
-        earlier queries still see in the oracle. A boundary exactly AT L0 is
-        fine — the fed token's write evicts it for every query, same as the
+        ring-eviction boundary (a block start at position >= the fine
+        window, ``kv.window_tokens`` — ``capacity`` is an admission limit
+        and is None on H>=3 collapse-up caches): a chunked verify writes the
+        whole window before attending, so a boundary strictly inside it
+        would evict (or at H>=3 collapse) a block that the window's earlier
+        queries still see in the oracle. A boundary exactly AT L0 is fine —
+        the fed token's write evicts it for every query, same as the
         oracle. Affected slots take plain decode steps instead: up to K
         consecutive waves approaching each block crossing (~K/block of
-        post-capacity tokens), until the boundary sits at the window start.
+        post-window tokens), until the boundary sits at the window start.
         Shrinking the draft window to the boundary instead (ragged per-slot
         K) would keep those waves speculative — ROADMAP open item.
         """
         L0 = kv.lengths
         last_boundary = (L0 + self.k) // kv.block * kv.block
-        unsafe = (last_boundary > L0) & (last_boundary >= kv.capacity)
+        unsafe = (last_boundary > L0) & (last_boundary >= kv.window_tokens)
         return active & ~unsafe, active & unsafe
 
     def round(self, engine, sched, active: np.ndarray) -> None:

@@ -1,0 +1,347 @@
+"""H-level pyramid conformance: collapse-up invariants + long-context serving.
+
+Pins DESIGN.md §14 from both ends:
+
+  * property tests (hypothesis, unquantized) — no token mass is ever lost
+    (live pyramid + collapsed levels + tail telescope to the exact stream
+    sum), a parent entry is exactly the sum of its children, batched
+    collapse within one chunk is order-invariant, and an H=2 build is
+    bit-identical to today's ring eviction with no hierarchy keys at all;
+  * engine tests — an H=3 engine completes prompts far longer than its fine
+    window (capacity is an admission limit only at H>=3), reports per-level
+    occupancy gauges, matches the fused kernel path token-for-token, keeps
+    greedy speculative decode (including ``draft_level`` 2 coarsened
+    drafts) identical to plain decode, and is chunk-size invariant;
+  * the serve/kv_cache.py import shim warns DeprecationWarning.
+"""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import hier
+from repro.models import get_model, init_params
+from repro.serve import Engine, EngineConfig, Request
+
+# hypothesis widens the property tests when installed; without it the same
+# properties run over a fixed example grid (the image may lack hypothesis,
+# and a skipped invariant is no invariant — cf. test_mra_properties.py).
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given
+
+    hypothesis.settings.register_profile(
+        "ci", max_examples=10, deadline=None, derandomize=True
+    )
+    hypothesis.settings.load_profile("ci")
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _kv(seed, B, Hkv, S, D):
+    r = np.random.default_rng(seed)
+    k = jnp.asarray(r.standard_normal((B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((B, Hkv, S, D)), jnp.float32)
+    return k, v
+
+
+def _upper_sums(cache):
+    """(K_sum, V_sum) of every collapsed entry + tail: sum of mean * count."""
+    up = hier.cache_upper_view(cache, 0)
+    cnt = up.counts[:, None, :, None]
+    return ((up.k_mean * cnt).sum(axis=2), (up.v_mean * cnt).sum(axis=2))
+
+
+# (B, Hkv, S-in-blocks, D, levels) stream shapes + a seed per case
+_STREAM_GRID = [
+    ((1, 2, 12, 4, 3), 0),
+    ((2, 1, 20, 8, 4), 1),
+    ((2, 2, 8, 4, 5), 2),
+    ((1, 1, 20, 4, 3), 3),
+]
+_ORDER_GRID = [
+    (0, 3, (1, 0, 2)),
+    (1, 4, (2, 1, 0)),
+    (2, 3, (2, 0, 1)),
+    (3, 4, (0, 2, 1)),
+]
+
+if HAVE_HYPOTHESIS:
+    _streams = st.tuples(
+        st.sampled_from([1, 2]),       # B
+        st.sampled_from([1, 2]),       # Hkv
+        st.sampled_from([8, 12, 20]),  # S in blocks
+        st.sampled_from([4, 8]),       # D
+        st.sampled_from([3, 4, 5]),    # levels
+    )
+
+    def stream_cases(fn):
+        return given(_streams, st.integers(0, 2**31 - 1))(fn)
+
+    def order_cases(fn):
+        return given(st.integers(0, 2**31 - 1), st.sampled_from([3, 4]),
+                     st.permutations([0, 1, 2]))(fn)
+else:
+    def stream_cases(fn):
+        return pytest.mark.parametrize("shape,seed", _STREAM_GRID)(fn)
+
+    def order_cases(fn):
+        return pytest.mark.parametrize("seed,levels,perm", _ORDER_GRID)(fn)
+
+
+@stream_cases
+def test_total_sum_conservation(shape, seed):
+    """Live pyramid + every collapsed level + tail == the exact stream sum.
+
+    The telescoping-mass invariant behind 'distant context folds in at the
+    coarsest resolution': eviction moves K/V mass up the hierarchy, never
+    out of it (unquantized build; quantization error is the approx_error
+    bench's dimension, not a correctness leak).
+    """
+    B, Hkv, nblk, D, levels = shape
+    block, nb = 4, 4
+    k, v = _kv(seed, B, Hkv, nblk * block, D)
+    cache = hier.build_hier_stream(k, v, block=block, nb=nb, levels=levels,
+                                   quantize=False)
+    ks, vs = _upper_sums(cache)
+    ks = ks + cache["pyr_k"][0].sum(axis=2)
+    vs = vs + cache["pyr_v"][0].sum(axis=2)
+    np.testing.assert_allclose(np.asarray(ks), np.asarray(k.sum(axis=2)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(vs), np.asarray(v.sum(axis=2)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@stream_cases
+def test_parent_is_sum_of_children(shape, seed):
+    """A full level-2 entry's mean * count == the sum of its two fine blocks.
+
+    Level-l entry e spans fine blocks [e*2^(l-1), (e+1)*2^(l-1)): checked at
+    l=2 where both children's exact K/V are recomputable from the stream.
+    """
+    B, Hkv, nblk, D, levels = shape
+    block, nb = 4, 4
+    k, v = _kv(seed, B, Hkv, nblk * block, D)
+    cache = hier.build_hier_stream(k, v, block=block, nb=nb, levels=levels,
+                                   quantize=False)
+    own = np.asarray(cache["hier_own2"])
+    cnt = np.asarray(cache["hier_cnt2"])
+    km = np.asarray(cache["hier_k2"][0]) * np.asarray(cache["hier_ks2"][0])[..., None]
+    checked = 0
+    for b in range(B):
+        for s in range(own.shape[1]):
+            if own[b, s] < 0 or cnt[b, s] != 2 * block:
+                continue
+            e = int(own[b, s])
+            span = np.asarray(k[b, :, 2 * e * block:(2 * e + 2) * block])
+            np.testing.assert_allclose(km[b, :, s] * cnt[b, s],
+                                       span.sum(axis=1), rtol=1e-4, atol=1e-4)
+            checked += 1
+    if nblk >= 2 * nb:  # enough evictions to fill a level-2 entry
+        assert checked > 0
+
+
+@order_cases
+def test_batched_collapse_is_order_invariant(seed, levels, perm):
+    """Evictions landing in distinct level-2 slots commute.
+
+    Within one prefill chunk (C <= window - b) the evicted blocks always
+    satisfy this — the chunked path may therefore apply them in any order
+    and still match sequential decode.
+    """
+    B, Hkv, D, block, n = 1, 2, 4, 4, 8
+    r = np.random.default_rng(seed)
+    # distinct level-2 entry ids and distinct slots (eid % n): blocks 2e, e<n
+    blocks = [0, 6, 10]
+    sums = [(jnp.asarray(r.standard_normal((B, Hkv, D)), jnp.float32),
+             jnp.asarray(r.standard_normal((B, Hkv, D)), jnp.float32))
+            for _ in blocks]
+
+    def run(order):
+        cache = {"tail_k": [jnp.zeros((B, Hkv, D))],
+                 "tail_v": [jnp.zeros((B, Hkv, D))],
+                 "tail_cnt": jnp.zeros((B,), jnp.int32)}
+        for lv in range(2, levels):
+            cache[f"hier_k{lv}"] = [jnp.zeros((B, Hkv, n, D))]
+            cache[f"hier_v{lv}"] = [jnp.zeros((B, Hkv, n, D))]
+            cache[f"hier_ks{lv}"] = [jnp.zeros((B, Hkv, n))]
+            cache[f"hier_vs{lv}"] = [jnp.zeros((B, Hkv, n))]
+            cache[f"hier_own{lv}"] = jnp.full((B, n), -1, jnp.int32)
+            cache[f"hier_cnt{lv}"] = jnp.zeros((B, n), jnp.int32)
+        on = jnp.ones((B,), bool)
+        cc = jnp.full((B,), block, jnp.int32)
+        for j in order:
+            upd, plan = hier.cache_collapse_tables(
+                cache, jnp.full((B,), blocks[j], jnp.int32), cc, on)
+            cache.update(upd)
+            hier.cache_store_layer(cache, 0, hier.cache_collapse_layer(
+                cache, 0, plan, *sums[j], quantize=False))
+        return cache
+
+    a, b = run(range(len(blocks))), run(perm)
+    for key in a:
+        va = a[key][0] if isinstance(a[key], list) else a[key]
+        vb = b[key][0] if isinstance(b[key], list) else b[key]
+        np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                                   rtol=1e-5, atol=1e-5, err_msg=key)
+
+
+@stream_cases
+def test_h2_build_matches_ring_eviction(shape, seed):
+    """levels=2 is today's cache: identical fine state, no hierarchy keys."""
+    B, Hkv, nblk, D, levels = shape
+    block, nb = 4, 4
+    k, v = _kv(seed, B, Hkv, nblk * block, D)
+    two = hier.build_hier_stream(k, v, block=block, nb=nb, levels=2)
+    h = hier.build_hier_stream(k, v, block=block, nb=nb, levels=levels)
+    assert not hier.has_hier(two) and hier.hier_level_ids(two) == ()
+    for key in ("k_cache", "v_cache", "page_blocks"):
+        np.testing.assert_array_equal(np.asarray(two[key]), np.asarray(h[key]),
+                                      err_msg=key)
+    for key in ("pyr_k", "pyr_v"):
+        np.testing.assert_array_equal(np.asarray(two[key][0]),
+                                      np.asarray(h[key][0]), err_msg=key)
+
+
+# --------------------------------------------------------------------------- #
+# engine-level: H>=3 serving
+# --------------------------------------------------------------------------- #
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config("qwen3-1.7b")  # mra2, block_size 16
+
+
+@pytest.fixture(scope="module")
+def h3cfg(cfg):
+    return cfg.replace(attention=cfg.attention.replace(levels=3))
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(get_model(cfg).param_specs(cfg), jax.random.PRNGKey(0))
+
+
+def _long_reqs():
+    # prompts far past the 64-token fine window; generation evicts further
+    return [Request(prompt=np.arange(1, 201) % 512, max_new_tokens=8),
+            Request(prompt=np.arange(3, 40), max_new_tokens=24)]
+
+
+def test_h3_engine_serves_past_the_fine_window(h3cfg, params):
+    """An H=3 engine completes a context much longer than max_len.
+
+    The H=2 cache rejects this outright (admission capacity == window); at
+    H>=3 capacity is None, prefill collapses evicted pages as the prompt
+    streams through, and the per-level occupancy gauges report the
+    collapsed mass.
+    """
+    eng = Engine(h3cfg, params, EngineConfig(slots=2, max_len=64, chunk=32))
+    done = eng.run(_long_reqs())
+    assert len(done) == 2
+    for r in done:
+        assert len(r.out) == r.max_new_tokens
+    g = eng.telemetry.snapshot()["gauges"]
+    assert g["cache_level2_entries"]["peak"] > 0
+    assert g["cache_level2_tokens"]["peak"] > 0
+    assert g["cache_tail_tokens"]["peak"] > 0  # 200 tokens >> window + level2
+    # the fine window never grew: live tokens stay bounded by max_len
+    assert g["cache_tokens_live"]["peak"] <= 64 * 2
+
+
+def test_h3_engine_kernel_matches_jnp(h3cfg, params):
+    """H=3 serving through the fused kernel (upper levels as resident
+    tiles) emits the jnp oracle's exact tokens, both tile modes."""
+    ecfg = EngineConfig(slots=2, max_len=64, chunk=32)
+    ref = Engine(h3cfg, params, ecfg).run(_long_reqs())
+    by = {len(r.prompt): r.out for r in ref}
+    kcfg = h3cfg.replace(attn_use_kernel=True, attn_interpret=True)
+    for mode in ("auto", "latency", "throughput"):
+        got = Engine(kcfg, params, ecfg.replace(kernel_mode=mode)).run(
+            _long_reqs())
+        for r in got:
+            np.testing.assert_array_equal(r.out, by[len(r.prompt)],
+                                          err_msg=f"kernel_mode={mode}")
+
+
+def test_h3_block_aligned_chunks_match_sequential_decode(h3cfg, params):
+    """Block-aligned prefill chunks (C == block) == per-token decode replay.
+
+    A chunk applies its evictions' collapses before attending, so within a
+    *larger* chunk the resolution seam sits at the chunk start rather than
+    at each block boundary (a documented DESIGN.md §14 semantic — collapsed
+    tokens are always strictly older than every chunk query, but early
+    queries see them one level coarser than sequential decode would). With
+    C == block the chunk evicts only at its own start, which is exactly the
+    sequential schedule: greedy tokens must match token-by-token replay
+    bit-for-bit.
+    """
+    model = get_model(h3cfg)
+    prompt = (np.arange(1, 201) % 512).astype(np.int32)
+    n_new = 8
+    eng = Engine(h3cfg, params, EngineConfig(slots=1, max_len=64, chunk=16))
+    out = eng.run([Request(prompt=prompt, max_new_tokens=n_new)])[0].out
+
+    cache = init_params(model.cache_specs(h3cfg, 1, 64), jax.random.PRNGKey(1))
+    step = jax.jit(lambda c, t: model.decode_step(params, h3cfg, c, t))
+    for t in prompt:
+        logits, cache = step(cache, jnp.asarray([t], jnp.int32))
+    oracle = []
+    for _ in range(n_new):
+        tok = int(jnp.argmax(jnp.where(
+            jnp.arange(logits.shape[-1]) < h3cfg.vocab, logits[0], -1e9)))
+        oracle.append(tok)
+        logits, cache = step(cache, jnp.asarray([tok], jnp.int32))
+    np.testing.assert_array_equal(out, np.array(oracle, np.int32))
+
+
+def test_h3_speculative_and_draft_level_match_plain(h3cfg, params):
+    """Greedy speculative H=3 serving — including the draft_level=2
+    coarsened draft — emits plain decode's exact tokens, and the snapshot/
+    rewind pair restores collapsed-level sums exactly (any drift would
+    desync the verify chunk's background and change a token)."""
+    ecfg = EngineConfig(slots=2, max_len=64, chunk=32)
+    ref = Engine(h3cfg, params, ecfg).run(_long_reqs())
+    by = {len(r.prompt): r.out for r in ref}
+    for dl in (1, 2):
+        eng = Engine(h3cfg, params, ecfg.replace(spec_k=3, draft_level=dl))
+        got = eng.run(_long_reqs())
+        for r in got:
+            np.testing.assert_array_equal(r.out, by[len(r.prompt)],
+                                          err_msg=f"draft_level={dl}")
+        assert eng.stats["spec_rounds"] > 0
+
+
+def test_h2_engine_unchanged_by_hier_plumbing(cfg, params):
+    """levels=2 engines still reject prompts past the window (capacity is
+    the admission limit) and carry no hierarchy gauges."""
+    eng = Engine(cfg, params, EngineConfig(slots=1, max_len=64, chunk=32))
+    with pytest.raises(ValueError, match="capacity"):
+        eng.run([Request(prompt=np.arange(100), max_new_tokens=1)])
+    assert "cache_level2_entries" not in eng.telemetry.snapshot()["gauges"]
+
+
+def test_kv_cache_shim_warns_deprecation():
+    import repro.serve.kv_cache as shim
+
+    with pytest.warns(DeprecationWarning, match="repro.serve.kv_cache"):
+        importlib.reload(shim)
+    # the re-exports stay intact for existing callers
+    assert shim.RingPagedKVCache is not None and shim.quantize_kv is not None
+
+
+def test_draft_level_requires_divisible_pages(h3cfg, params):
+    """Ring-page grouping guard: nb % 2^(draft_level-1) != 0 is a loud
+    config error at dispatch, not silent misaggregation."""
+    from repro.serve.speculative import draft_config
+
+    bad = draft_config(h3cfg, draft_level=4)  # gsz 8 vs nb 4 at max_len 64
+    model = get_model(bad)
+    cache = init_params(model.cache_specs(bad, 1, 64), jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="draft_level"):
+        model.decode_step(params, bad, cache, jnp.zeros((1,), jnp.int32))
